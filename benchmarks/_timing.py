@@ -1,0 +1,16 @@
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=1, repeats=3, **kw):
+    """Median wall-clock seconds of a jitted callable (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

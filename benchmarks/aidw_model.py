@@ -1,0 +1,53 @@
+"""Analytic TPU-v5e performance model for the AIDW kernels — the modeled-TPU
+side of every benchmark table (this box is CPU-only; see EXPERIMENTS §Perf
+for the roofline derivation and assumptions).
+
+Per interpolated point, both passes sweep all m data points:
+  kNN pass    : 7 flop/pair (2 sub, 2 mul, 1 add + 2 amortised compare/select)
+                + k-pass merge ~ 3k flop/pair/  (vectorised min-extract,
+                  amortised over d_chunk columns: 3k*(k+bm)/bm ~ 3k)
+  weight pass : 7 flop/pair distance + ~8 flop/pair for exp/log weight
+                (transcendentals run on the VPU at ~1 elem/cycle/lane)
+HBM traffic  : SoA reads 12 B/point/tile-sweep (x,y,z f32) streamed once per
+               query block; AoaS reads 16 B/point (padded struct).
+"""
+
+from __future__ import annotations
+
+PEAK_VPU_F32 = 197e12 / 4  # v5e VPU f32 (vector) ~ 1/4 of MXU bf16 peak
+HBM_BW = 819e9
+
+
+def aidw_flops(m, n, k=10, layout="soa"):
+    knn = (7 + 3 * k) * m * n
+    weight = (7 + 8) * m * n
+    return knn + weight
+
+
+def aidw_hbm_bytes(m, n, k=10, layout="soa", block_q=256, impl="tiled"):
+    per_point = 12 if layout == "soa" else 16
+    sweeps = 2  # the paper's two distance passes
+    query_blocks = max(n // block_q, 1)
+    data_traffic = per_point * m * query_blocks * sweeps
+    io = 8 * n + 12 * m  # queries in, z out (+ initial load)
+    return data_traffic + io
+
+
+def modeled_tpu_seconds(m, n, k=10, layout="soa", impl="tiled", block_q=None):
+    """Roofline max(compute, memory) — collective-free on one chip.
+    The naive kernel's query block is VMEM-capped at 64 (the whole data
+    array must co-reside), quadrupling its data re-fetch traffic."""
+    if block_q is None:
+        block_q = 64 if impl == "naive" else 256
+    compute = aidw_flops(m, n, k, layout) / PEAK_VPU_F32
+    memory = aidw_hbm_bytes(m, n, k, layout, block_q, impl) / HBM_BW
+    return max(compute, memory), {"compute_s": compute, "memory_s": memory}
+
+
+def naive_vmem_bytes(m, block_q=64, k=10):
+    """Working set of the UNTILED (naive) kernel: full data arrays + the
+    (block_q, k+m) merge buffer resident in VMEM."""
+    return 3 * 4 * m + 4 * block_q * (k + m) + 4 * block_q * 4
+
+
+VMEM_BYTES = 16 * 2**20  # v5e ~16 MiB/core

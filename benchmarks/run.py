@@ -1,0 +1,231 @@
+"""Benchmark harness — one function per paper table/figure.
+
+CSV rows: ``table,name,value,derived`` on stdout; sections mirror the paper:
+  table1  — execution time (measured XLA-CPU at reduced sizes + modeled TPU
+            at the paper's sizes; this box has no GPU/TPU to time)
+  fig4    — speedups on single precision (modeled TPU vs measured CPU)
+  fig5    — double precision (measured f64/f32 CPU ratio; TPU has no f64)
+  fig6    — SoA vs AoaS (measured CPU + analytic byte ratio)
+  fig7    — tiled vs naive (measured CPU locality effect + the VMEM cliff)
+  lm      — roofline summary of the dry-run artifacts (if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._timing import time_fn
+from benchmarks.aidw_model import (
+    VMEM_BYTES,
+    modeled_tpu_seconds,
+    naive_vmem_bytes,
+)
+from repro.core.aidw import AIDWParams, aidw_interpolate
+from repro.core.idw import idw_interpolate
+from repro.core.layouts import soa_to_aoas
+from repro.data.spatial import uniform_points
+
+K = 1024
+PAPER_SIZES = {"10K": 10 * K, "50K": 50 * K, "100K": 100 * K, "500K": 500 * K, "1000K": 1000 * K}
+# Paper Table 1 (ms), single precision — cited for comparison
+PAPER_TABLE1 = {
+    "cpu": {"10K": 6791, "50K": 168234, "100K": 673806, "500K": 16852984, "1000K": 67471402},
+    "naive_soa": {"10K": 65.3, "50K": 863, "100K": 2884, "500K": 63599, "1000K": 250574},
+    "tiled_soa": {"10K": 61.3, "50K": 714, "100K": 2242, "500K": 43843, "1000K": 168189},
+}
+
+
+def _row(table, name, value, derived=""):
+    print(f"{table},{name},{value},{derived}")
+
+
+def _points(m, dtype=np.float32, seed=0):
+    dx, dy, dz = uniform_points(m, seed=seed, dtype=dtype)
+    qx, qy, _ = uniform_points(m, seed=seed + 1, dtype=dtype)
+    return map(jnp.asarray, (dx, dy, dz, qx, qy))
+
+
+def table1_execution_time(quick=False):
+    """Paper Table 1. Measured: XLA-CPU tiled AIDW at reduced sizes (the
+    honest CPU baseline this box can run). Modeled: TPU-v5e roofline at the
+    paper's sizes."""
+    p = AIDWParams(k=10, area=1.0)
+    sizes = [1 * K, 4 * K] if quick else [1 * K, 4 * K, 16 * K]
+    for m in sizes:
+        dx, dy, dz, qx, qy = _points(m)
+        t = time_fn(lambda: aidw_interpolate(dx, dy, dz, qx, qy, p, area=1.0,
+                                             q_chunk=min(1024, m), d_chunk=min(4096, m)))
+        _row("table1", f"cpu_xla_aidw_{m//K}K", f"{t*1e3:.1f}ms", f"m=n={m}")
+    for name, m in PAPER_SIZES.items():
+        for impl in ("naive", "tiled"):
+            sec, parts = modeled_tpu_seconds(m, m, impl=impl)
+            feasible = naive_vmem_bytes(m) <= VMEM_BYTES if impl == "naive" else True
+            _row("table1", f"tpu_modeled_{impl}_soa_{name}",
+                 f"{sec*1e3:.1f}ms" if feasible else "VMEM-infeasible",
+                 f"compute={parts['compute_s']*1e3:.1f}ms memory={parts['memory_s']*1e3:.1f}ms")
+        _row("table1", f"paper_gpu_tiled_{name}", f"{PAPER_TABLE1['tiled_soa'][name]}ms", "paper value, GT 730M")
+
+
+def fig4_speedups(quick=False):
+    """Paper Fig. 4: speedup vs the CPU baseline, single precision.
+    We report (a) the paper's own 270x/400x claims, (b) our modeled-TPU vs
+    measured-CPU speedup at sizes this box can time."""
+    p = AIDWParams(k=10, area=1.0)
+    m = 4 * K if quick else 16 * K
+    dx, dy, dz, qx, qy = _points(m)
+    t_cpu = time_fn(lambda: aidw_interpolate(dx, dy, dz, qx, qy, p, area=1.0))
+    t_tpu_naive, _ = modeled_tpu_seconds(m, m, impl="naive")
+    t_tpu_tiled, _ = modeled_tpu_seconds(m, m, impl="tiled")
+    _row("fig4", f"measured_cpu_{m//K}K", f"{t_cpu*1e3:.1f}ms")
+    _row("fig4", "modeled_speedup_naive", f"{t_cpu/t_tpu_naive:.0f}x", "vs 1-core XLA-CPU")
+    _row("fig4", "modeled_speedup_tiled", f"{t_cpu/t_tpu_tiled:.0f}x", "vs 1-core XLA-CPU")
+    _row("fig4", "paper_speedup_naive", "270x", "paper: i7-4700MQ 1-thread vs GT 730M")
+    _row("fig4", "paper_speedup_tiled", "400x", "paper")
+
+
+def fig5_double_precision(quick=False):
+    """Paper Fig. 5: f64 performance.  Measured f64/f32 ratio on CPU; on the
+    TPU target f64 has no native unit (the paper's f64 cliff is absolute)."""
+    m = 2 * K if quick else 8 * K
+    script = f"""
+import numpy as np, jax.numpy as jnp, time, jax
+from repro.core.aidw import AIDWParams, aidw_interpolate
+from repro.data.spatial import uniform_points
+p = AIDWParams(k=10, area=1.0)
+for dt in (np.float32, np.float64):
+    dx, dy, dz = uniform_points({m}, seed=0, dtype=dt)
+    qx, qy, _ = uniform_points({m}, seed=1, dtype=dt)
+    args = list(map(jnp.asarray, (dx, dy, dz, qx, qy)))
+    f = lambda: aidw_interpolate(*args, p, area=1.0)
+    jax.block_until_ready(f())
+    t0 = time.perf_counter(); jax.block_until_ready(f()); t = time.perf_counter() - t0
+    print(f"F64BENCH,{{np.dtype(dt).name}},{{t*1e3:.1f}}")
+"""
+    env = dict(os.environ, JAX_ENABLE_X64="1", PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", script], env=env, capture_output=True, text=True, timeout=1200)
+    times = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("F64BENCH"):
+            _, name, ms = line.split(",")
+            times[name] = float(ms)
+            _row("fig5", f"measured_cpu_{name}_{m//K}K", f"{ms}ms")
+    if "float32" in times and "float64" in times:
+        _row("fig5", "measured_f64_over_f32", f"{times['float64']/times['float32']:.2f}x", "CPU (SIMD width halves)")
+    _row("fig5", "paper_f64_speedup", "~8x vs CPU", "GT 730M f64 at 1/24 rate")
+    _row("fig5", "tpu_f64", "no native f64", "use Kahan-f32 instead (EXPERIMENTS §Accuracy)")
+
+
+def fig6_layouts(quick=False):
+    """Paper Fig. 6: SoA vs AoaS.  Analytic: AoaS moves 16/12 = 1.33x the
+    HBM bytes.  Measured on CPU: strided struct loads vs contiguous."""
+    p = AIDWParams(k=10, area=1.0)
+    m = 4 * K if quick else 16 * K
+    dx, dy, dz, qx, qy = _points(m)
+    t_soa = time_fn(lambda: aidw_interpolate(dx, dy, dz, qx, qy, p, area=1.0))
+    data_aoas = soa_to_aoas(dx, dy, dz)
+
+    @jax.jit
+    def aoas_path(a, qx, qy):
+        return aidw_interpolate(a[:, 0], a[:, 1], a[:, 2], qx, qy, p, area=1.0)
+
+    t_aoas = time_fn(lambda: aoas_path(data_aoas, qx, qy))
+    _row("fig6", f"measured_cpu_soa_{m//K}K", f"{t_soa*1e3:.1f}ms")
+    _row("fig6", f"measured_cpu_aoas_{m//K}K", f"{t_aoas*1e3:.1f}ms")
+    _row("fig6", "analytic_tpu_byte_ratio", "1.33x", "16B vs 12B per data point per sweep")
+    _row("fig6", "paper_soa_vs_aoas", "1.015x", "paper: SoA slightly faster")
+
+
+def fig7_tiled_vs_naive(quick=False):
+    """Paper Fig. 7: tiled vs naive.  Measured on CPU: cache-locality effect
+    of tiling (full-matrix reference vs tiled interpolate).  Analytic on
+    TPU: the naive kernel's VMEM working set crosses the 16 MiB cliff."""
+    from repro.core.aidw import aidw_reference
+
+    p = AIDWParams(k=10, area=1.0)
+    m = 2 * K if quick else 8 * K
+    dx, dy, dz, qx, qy = _points(m)
+    ref = jax.jit(lambda *a: aidw_reference(*a, p, area=1.0))
+    t_naive = time_fn(lambda: ref(dx, dy, dz, qx, qy))
+    t_tiled = time_fn(lambda: aidw_interpolate(dx, dy, dz, qx, qy, p, area=1.0))
+    _row("fig7", f"measured_cpu_fullmatrix_{m//K}K", f"{t_naive*1e3:.1f}ms", "naive analogue: O(n*m) matrix")
+    _row("fig7", f"measured_cpu_tiled_{m//K}K", f"{t_tiled*1e3:.1f}ms")
+    note = ("CPU cache locality favours tiling" if t_naive > t_tiled
+            else "at this size the full matrix fits cache; tiled pays scan overhead")
+    _row("fig7", "measured_naive_over_tiled", f"{t_naive/t_tiled:.2f}x", note)
+    for name, m_ in PAPER_SIZES.items():
+        fits = naive_vmem_bytes(m_) <= VMEM_BYTES
+        _row("fig7", f"tpu_naive_vmem_{name}", f"{naive_vmem_bytes(m_)/2**20:.1f}MiB",
+             "fits" if fits else "exceeds 16MiB VMEM -> naive unschedulable on TPU")
+    _row("fig7", "paper_tiled_speedup", "1.3x", "paper: shared-memory tiling")
+
+
+def lm_rooflines(quick=False):
+    """Roofline summary from the dry-run artifacts (EXPERIMENTS §Roofline)."""
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+    cm_dir = os.path.join(art, "costmodel")
+    dr_dir = os.path.join(art, "dryrun")
+    if not os.path.isdir(dr_dir):
+        _row("lm", "dryrun_artifacts", "missing", "run repro.launch.dryrun first")
+        return
+    import json
+    from repro.launch.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
+
+    n = 0
+    for f in sorted(os.listdir(dr_dir)):
+        if not f.endswith(".json") or f.count("__") > 2:
+            continue  # tagged §Perf variants are reported in EXPERIMENTS.md
+        rec = json.load(open(os.path.join(dr_dir, f)))
+        if rec.get("status") != "ok":
+            continue
+        cm_path = os.path.join(cm_dir, f)
+        flops = rec.get("cost_analysis", {}).get("flops", 0)
+        byts = rec.get("cost_analysis", {}).get("bytes accessed", 0)
+        coll = rec.get("collectives", {}).get("total_bytes", 0)
+        src = "raw"
+        if os.path.exists(cm_path):
+            cm = json.load(open(cm_path))
+            if cm.get("status") == "ok":
+                flops = cm["corrected"]["flops"]
+                byts = cm["corrected"]["bytes_accessed"]
+                coll = cm["corrected"]["collectives"]["total_bytes"]
+                src = "loop-corrected"
+        terms = {"compute": flops / PEAK_FLOPS, "memory": byts / HBM_BW, "collective": coll / ICI_BW}
+        dom = max(terms, key=terms.get)
+        _row("lm", f"{rec['arch']}|{rec['shape']}|{rec['mesh']}",
+             f"{terms[dom]*1e3:.1f}ms", f"dominant={dom} ({src})")
+        n += 1
+    _row("lm", "cells_ok", str(n))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated table names")
+    args = ap.parse_args()
+    tables = {
+        "table1": table1_execution_time,
+        "fig4": fig4_speedups,
+        "fig5": fig5_double_precision,
+        "fig6": fig6_layouts,
+        "fig7": fig7_tiled_vs_naive,
+        "lm": lm_rooflines,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("table,name,value,derived")
+    for name, fn in tables.items():
+        if only and name not in only:
+            continue
+        fn(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

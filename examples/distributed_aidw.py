@@ -1,0 +1,47 @@
+"""Multi-device ring-AIDW demo (beyond paper): data points AND queries
+sharded over an 8-device mesh, the data shards rotating via collective
+permute while each shard folds them into its running k-best / weight
+partials.  Verifies exactness against the single-device oracle.
+
+Runs itself in a subprocess with 8 simulated CPU devices.
+
+Run:  PYTHONPATH=src python examples/distributed_aidw.py
+"""
+
+import os
+import subprocess
+import sys
+
+WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.aidw import AIDWParams
+from repro.core.distributed import ring_aidw
+from repro.kernels.ref import aidw_ref
+from repro.data.spatial import clustered_points, uniform_points
+
+m, n = 4096, 2048
+dx, dy, dz = clustered_points(m, seed=1)
+qx, qy, _ = uniform_points(n, seed=2)
+p = AIDWParams(k=10, area=1.0)
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+print(f"mesh: {dict(mesh.shape)} -> ring over 8 shards; {m} data pts, {n} queries")
+z, a = ring_aidw(mesh, dx, dy, dz, qx, qy, params=p, area=1.0, q_chunk=256, d_chunk=512)
+z_ref, a_ref = aidw_ref(dx, dy, dz, qx, qy, p, 1.0)
+err = float(np.abs(np.asarray(z) - np.asarray(z_ref)).max())
+print(f"ring result vs single-device oracle: max |dz| = {err:.2e}")
+hlo = jax.jit(lambda *args: ring_aidw(mesh, *args, params=p, area=1.0, q_chunk=256, d_chunk=512)) \
+    .lower(dx, dy, dz, qx, qy).compile().as_text()
+print("collective-permute ops in compiled HLO:", hlo.count("collective-permute"))
+assert err < 5e-4
+print("OK")
+"""
+
+if __name__ == "__main__":
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", WORKER], env=env)
+    raise SystemExit(r.returncode)

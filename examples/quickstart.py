@@ -1,0 +1,40 @@
+"""Quickstart: AIDW interpolation with the Pallas kernels (60 seconds).
+
+Builds a clustered synthetic elevation field, interpolates a query set with
+the paper's tiled kernel (interpret mode on CPU, same call compiles for TPU),
+and compares AIDW vs standard IDW accuracy on the known ground truth.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.aidw import AIDWParams
+from repro.data.spatial import clustered_points, uniform_points
+from repro.kernels import aidw, idw
+
+
+def main():
+    rng = np.random.default_rng(0)
+    truth = lambda x, y: np.sin(4 * x) * np.cos(3 * y) + 0.5 * x
+
+    # clustered samples of a smooth field (the regime AIDW was designed for)
+    dx, dy, _ = clustered_points(4096, seed=1, n_clusters=24, spread=0.04)
+    dz = truth(dx, dy).astype(np.float32)
+    qx, qy, _ = uniform_points(2048, seed=2)
+    q_truth = truth(qx, qy)
+
+    params = AIDWParams(k=10, area=1.0)
+    z_aidw, alpha = aidw(dx, dy, dz, qx, qy, params=params, area=1.0, impl="tiled", layout="soa")
+    z_idw = idw(dx, dy, dz, qx, qy, alpha=2.0)
+
+    rmse = lambda z: float(np.sqrt(np.mean((np.asarray(z) - q_truth) ** 2)))
+    print(f"data points: {dx.shape[0]}, queries: {qx.shape[0]}")
+    print(f"adaptive alpha range: [{float(np.min(alpha)):.2f}, {float(np.max(alpha)):.2f}]")
+    print(f"RMSE  AIDW (tiled kernel): {rmse(z_aidw):.4f}")
+    print(f"RMSE  IDW  (alpha=2):      {rmse(z_idw):.4f}")
+    print("AIDW adapts the decay power to local density; IDW uses one global power.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Batched serving example (deliverable b): prefill + KV-cache greedy decode
+for any pool arch, the same serve_step the decode_32k/long_500k dry-run
+cells lower onto the production mesh.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch mixtral-8x7b]
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch),
+        "--prompt-len", "16",
+        "--gen", str(args.gen),
+    ])

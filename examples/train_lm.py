@@ -1,0 +1,28 @@
+"""End-to-end training driver (deliverable b): trains a reduced-config model
+from the assigned pool for a few hundred steps on CPU with the full
+production stack — grad-accum train step, AdamW, checkpointing, restart, and
+the fault-tolerant loop.  On TPU hardware, drop --reduced and pick a mesh.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch mamba2-130m] [--steps 200]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--ckpt-every", "50",
+    ])

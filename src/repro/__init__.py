@@ -1,0 +1,7 @@
+"""repro — production-grade JAX/Pallas reproduction of
+"Accelerating Adaptive IDW Interpolation Algorithm on a Single GPU"
+(Mei, Xu & Xu, 2015), plus the assigned 10-architecture LM substrate,
+multi-pod dry-run and roofline tooling.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,42 @@
+"""AIDW workload configs — the paper's own workloads as first-class citizens
+of the same launcher/dry-run/roofline machinery as the LM archs.
+
+Paper sizes (§4): 10K..1000K points, data == query count, unit square.
+Production sizes (beyond paper): pod/multi-pod scale where the data set
+itself must be ring-sharded.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.aidw import AIDWParams
+
+
+@dataclass(frozen=True)
+class AIDWWorkload:
+    name: str
+    m: int  # data points
+    n: int  # interpolated points
+    k: int = 10
+    mode: str = "ring"  # "ring" (data sharded) | "replicated" (queries only)
+    q_chunk: int = 1024
+    d_chunk: int = 2048
+
+    @property
+    def params(self) -> AIDWParams:
+        return AIDWParams(k=self.k, area=1.0)
+
+
+# paper's Table-1 sizes (1K = 1024)
+PAPER_SIZES = {f"{s}K": s * 1024 for s in (10, 50, 100, 500, 1000)}
+
+AIDW_WORKLOADS = {
+    # paper-scale, single chip handles it, queries sharded, data replicated
+    "aidw-pod-1m": AIDWWorkload("aidw-pod-1m", m=1 << 20, n=1 << 20, mode="replicated"),
+    # production-scale: 2^27 data points (134M) x 2^24 queries — data must be
+    # ring-sharded (beyond paper: this cannot run on the paper's single GPU)
+    "aidw-ring-134m": AIDWWorkload("aidw-ring-134m", m=1 << 27, n=1 << 24, mode="ring"),
+    # §Perf hillclimb: same workload, queries+state rotate instead of data
+    "aidw-ringq-134m": AIDWWorkload("aidw-ringq-134m", m=1 << 27, n=1 << 24, mode="ring_q"),
+}

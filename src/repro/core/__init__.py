@@ -1,0 +1,41 @@
+"""The paper's primary contribution: the AIDW interpolation system.
+
+Pure-JAX math (Eq. 2-6 of the paper), the brute-force kNN adapted to a
+vectorised TPU form, SoA/AoaS layouts, accuracy tooling (Kahan), and the
+beyond-paper multi-device ring-sharded AIDW.
+"""
+
+from repro.core.aidw import (
+    AIDWParams,
+    aidw_reference,
+    aidw_interpolate,
+    adaptive_alpha,
+    alpha_from_mu,
+    fuzzy_membership,
+    expected_nn_distance,
+)
+from repro.core.idw import idw_reference, idw_interpolate
+from repro.core.knn import (
+    k_smallest,
+    running_k_best,
+    paper_insertion_knn,
+)
+from repro.core.layouts import soa_to_aoas, aoas_to_soa, PointSet
+
+__all__ = [
+    "AIDWParams",
+    "aidw_reference",
+    "aidw_interpolate",
+    "adaptive_alpha",
+    "alpha_from_mu",
+    "fuzzy_membership",
+    "expected_nn_distance",
+    "idw_reference",
+    "idw_interpolate",
+    "k_smallest",
+    "running_k_best",
+    "paper_insertion_knn",
+    "soa_to_aoas",
+    "aoas_to_soa",
+    "PointSet",
+]

@@ -1,0 +1,72 @@
+"""Standard IDW (Shepard 1968) — the paper's comparison baseline (§5.3.1).
+
+Identical weighting pass to AIDW but with a user-fixed constant power alpha,
+and no kNN pass (one distance sweep instead of two).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def idw_reference(dx, dy, dz, qx, qy, alpha: float = 2.0, *, exact_hit_eps: float = 1e-18):
+    """Memory-naive oracle, full (n, m) distance matrix. Returns (n,) z_hat."""
+    ddx = qx[:, None] - dx[None, :]
+    ddy = qy[:, None] - dy[None, :]
+    d2 = ddx * ddx + ddy * ddy
+    dtype = d2.dtype
+    tiny = jnp.asarray(1e-30 if dtype == jnp.float32 else 1e-290, dtype)
+    w = jnp.exp(-(alpha * 0.5) * jnp.log(jnp.maximum(d2, tiny)))
+    zhat = jnp.sum(w * dz[None, :], axis=1) / jnp.sum(w, axis=1)
+    min_d2 = jnp.min(d2, axis=1)
+    hit_z = dz[jnp.argmin(d2, axis=1)]
+    return jnp.where(min_d2 <= exact_hit_eps, hit_z, zhat)
+
+
+@partial(jax.jit, static_argnames=("alpha", "q_chunk", "d_chunk"))
+def idw_interpolate(dx, dy, dz, qx, qy, alpha: float = 2.0, *, q_chunk: int = 1024, d_chunk: int = 4096):
+    """Tiled single-host IDW (single distance sweep). Returns (n,) z_hat."""
+    m, n = dx.shape[0], qx.shape[0]
+    dtype = qx.dtype
+    big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
+    m_pad = (-m) % d_chunk
+    dxp = jnp.concatenate([dx, jnp.full((m_pad,), big, dtype)])
+    dyp = jnp.concatenate([dy, jnp.full((m_pad,), big, dtype)])
+    dzp = jnp.concatenate([dz, jnp.zeros((m_pad,), dtype)])
+    n_pad = (-n) % q_chunk
+    qxp = jnp.concatenate([qx, jnp.zeros((n_pad,), dtype)])
+    qyp = jnp.concatenate([qy, jnp.zeros((n_pad,), dtype)])
+    tiles = (dxp.reshape(-1, d_chunk), dyp.reshape(-1, d_chunk), dzp.reshape(-1, d_chunk))
+
+    def per_q(q):
+        qcx, qcy = q
+
+        def step(carry, tile):
+            sum_w, sum_wz, min_d2, hit_z = carry
+            tx, ty, tz = tile
+            ddx = qcx[:, None] - tx[None, :]
+            ddy = qcy[:, None] - ty[None, :]
+            d2 = ddx * ddx + ddy * ddy
+            tiny = jnp.asarray(1e-30 if dtype == jnp.float32 else 1e-290, dtype)
+            w = jnp.exp(-(alpha * 0.5) * jnp.log(jnp.maximum(d2, tiny)))
+            tmin = jnp.min(d2, axis=1)
+            thz = tz[jnp.argmin(d2, axis=1)]
+            better = tmin < min_d2
+            return (
+                sum_w + jnp.sum(w, axis=1),
+                sum_wz + jnp.sum(w * tz[None, :], axis=1),
+                jnp.where(better, tmin, min_d2),
+                jnp.where(better, thz, hit_z),
+            ), None
+
+        zeros = jnp.zeros((q_chunk,), dtype)
+        (sw, swz, md, hz), _ = jax.lax.scan(
+            step, (zeros, zeros, jnp.full((q_chunk,), jnp.inf, dtype), zeros), tiles
+        )
+        return jnp.where(md <= 1e-18, hz, swz / sw)
+
+    out = jax.lax.map(per_q, (qxp.reshape(-1, q_chunk), qyp.reshape(-1, q_chunk)))
+    return out.reshape(-1)[:n]

@@ -1,0 +1,86 @@
+"""Brute-force k-nearest-neighbour search, two ways.
+
+1. :func:`paper_insertion_knn` — a literal port of the paper's Fig. 1 / Fig. 3
+   per-thread algorithm (fixed k-buffer, bubble/insertion maintenance).  Used
+   only as a test oracle documenting the original CUDA logic.
+
+2. :func:`running_k_best` — the TPU-native adaptation: a *branch-free,
+   vectorised k-pass min-extract merge* that folds a tile of candidate
+   distances into a running (rows, k) best set.  This is the exact same
+   O(k * m) work the paper's insertion sort does in the worst case, but
+   expressed as dense vector ops (min / cumsum / select) that lower both in
+   XLA and inside Pallas Mosaic kernels (no argmin, duplicate-safe).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def running_k_best(best, d2_tile):
+    """Merge a tile of squared distances into the running k-best set.
+
+    Args:
+      best: (rows, k) current k smallest values per row, ascending not
+        required (any order), +inf for empty slots.
+      d2_tile: (rows, t) new candidate values.
+
+    Returns:
+      (rows, k) the k smallest of ``concat([best, d2_tile], axis=1)`` per row,
+      in ascending order.
+
+    Implementation: k passes; each pass extracts the row-min and masks out
+    exactly one occurrence (first along the row, via a cumsum trick — this is
+    duplicate-safe and avoids argmin, which Mosaic TPU does not lower).
+    """
+    k = best.shape[1]
+    c = jnp.concatenate([best, d2_tile], axis=1)
+    inf = jnp.asarray(jnp.inf, c.dtype)
+    outs = []
+    for _ in range(k):
+        v = jnp.min(c, axis=1, keepdims=True)  # (rows, 1)
+        outs.append(v)
+        eq = (c == v).astype(jnp.int32)
+        first = (jnp.cumsum(eq, axis=1) == 1) & (eq == 1)  # first occurrence only
+        c = jnp.where(first, inf, c)
+    return jnp.concatenate(outs, axis=1)
+
+
+def k_smallest(values, k: int):
+    """k smallest entries of the last axis, ascending (thin top_k wrapper)."""
+    import jax
+
+    neg, _ = jax.lax.top_k(-values, k)
+    return -neg
+
+
+def paper_insertion_knn(d: np.ndarray, k: int) -> np.ndarray:
+    """Fig. 1 / Fig. 3 lines 11-32 of the paper, verbatim (numpy, one query).
+
+    Args:
+      d: (m,) squared distances from one interpolated point to all data points.
+      k: neighbourhood size.
+
+    Returns:
+      (k,) the k smallest squared distances, ascending.
+    """
+    m = d.shape[0]
+    buf = d[:k].copy()
+    # "sort the first k distances in ascending order" (bubble sort, Fig. 3)
+    for i in range(k - 1):
+        for j in range(k - 1 - i):
+            if buf[j] > buf[j + 1]:
+                buf[j], buf[j + 1] = buf[j + 1], buf[j]
+    # stream the remaining m-k candidates
+    for i in range(k, m):
+        dist = d[i]
+        if dist < buf[k - 1]:
+            buf[k - 1] = dist
+            # neighbouring compare-and-swap back to sorted order
+            for j in range(k - 2, -1, -1):
+                if buf[j] > buf[j + 1]:
+                    buf[j], buf[j + 1] = buf[j + 1], buf[j]
+                else:
+                    break
+    return buf

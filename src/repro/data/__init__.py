@@ -1,0 +1,5 @@
+from repro.data.synthetic import SyntheticTokens
+from repro.data.spatial import clustered_points, uniform_points
+from repro.data.pipeline import HostDataPipeline
+
+__all__ = ["SyntheticTokens", "clustered_points", "uniform_points", "HostDataPipeline"]

@@ -1,0 +1,59 @@
+"""Host-side input pipeline: deterministic sharded batches with prefetch.
+
+Single-process here, but the interfaces are multi-host: each host computes
+its own slice from (step, host_id, num_hosts) — restart/elastic-safe.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import queue
+
+from repro.data.synthetic import SyntheticTokens
+
+
+class HostDataPipeline:
+    """Background-thread prefetch of deterministic host batches."""
+
+    def __init__(self, dataset: SyntheticTokens, host_id: int = 0, num_hosts: int = 1, prefetch: int = 2):
+        self.dataset = dataset
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._next_step = 0
+
+    def start(self, from_step: int = 0):
+        self._next_step = from_step
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def _worker(self):
+        step = self._next_step
+        while not self._stop.is_set():
+            batch = self.dataset.host_batch_at(step, self.host_id, self.num_hosts)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def get(self):
+        return self._q.get()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            # drain so the worker unblocks
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5)

@@ -1,0 +1,62 @@
+"""Deterministic synthetic LM token stream.
+
+Key property for fleet-scale training: any (step, host) slice is computable
+*independently* — no coordinator, no filesystem, bitwise identical across
+restarts and across elastic resizes (the global batch for step s does not
+depend on how many hosts consume it).  This is the straggler-free data story
+referenced in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokens:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def _key(self, step: int):
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+
+    def global_batch_at(self, step: int):
+        """Full (GB, S+1) token block; [:, :-1] inputs, [:, 1:] labels."""
+        k = self._key(step)
+        toks = jax.random.randint(
+            k, (self.global_batch, self.seq_len + 1), 0, self.vocab_size, jnp.int32
+        )
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def host_batch_at(self, step: int, host_id: int, num_hosts: int):
+        """This host's contiguous slice of the *same* global stream."""
+        assert self.global_batch % num_hosts == 0
+        per = self.global_batch // num_hosts
+        full = self.global_batch_at(step)
+        sl = slice(host_id * per, (host_id + 1) * per)
+        return {k: v[sl] for k, v in full.items()}
+
+
+def batch_for_arch(cfg, shape, step: int = 0, *, reduced_batch: int | None = None, reduced_seq: int | None = None, seed: int = 0):
+    """Concrete numpy batch for train smoke runs, including the modality
+    stubs (frames / visual embeds / M-RoPE positions)."""
+    b = reduced_batch or shape.global_batch
+    s = reduced_seq or shape.seq_len
+    ds = SyntheticTokens(cfg.vocab_size, b, s, seed=seed)
+    batch = dict(ds.global_batch_at(step))
+    rng = np.random.default_rng(seed + step)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)).astype(np.float32) * 0.1)
+    if cfg.family == "vlm":
+        batch["visual_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_vis_tokens, cfg.d_model)).astype(np.float32) * 0.1
+        )
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32), (b, s))
+        batch["mrope_positions"] = jnp.asarray(np.broadcast_to(pos, (3, b, s)).copy())
+    return batch

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper IS a kernel-engineering paper: its contribution is the naive and
+tiled (shared-memory) AIDW kernels in two data layouts.  Each kernel here has
+its pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in ``ops.py``;
+kernels are validated in interpret mode on CPU (TPU is the compile target).
+"""
+
+from repro.kernels.ops import aidw, idw
+
+__all__ = ["aidw", "idw"]

@@ -1,0 +1,79 @@
+"""Shared Pallas kernel-body helpers for the AIDW/IDW kernels.
+
+Two in-kernel orientations (see DESIGN.md §2):
+
+* ``data_axis=1`` (SoA family): queries vary along sublanes, data points along
+  lanes — distance tile ``D`` is ``(bn, bm)``, per-query reductions run along
+  axis 1.
+* ``data_axis=0`` (AoaS family): the ``(bm, 4)`` aligned-struct tile puts data
+  points on sublanes, so queries live on lanes — ``D`` is ``(bm, bn)`` and
+  per-query reductions run along axis 0.
+
+All helpers are pure jnp on values (not refs) so they lower identically in
+Mosaic and in interpret mode, and can be unit-tested directly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.aidw import AIDWParams, adaptive_alpha
+
+
+def sq_dist_tile(qx, qy, dx, dy):
+    """Squared-distance tile via VPU broadcast (see DESIGN.md: beats the
+    K=2 MXU matmul form at 1.6% MXU utilisation)."""
+    ddx = qx - dx
+    ddy = qy - dy
+    return ddx * ddx + ddy * ddy
+
+
+def merge_k_best(best, d2, data_axis: int):
+    """Branch-free k-pass min-extract merge (duplicate-safe, argmin-free).
+
+    best: (bn, k) for data_axis=1, (k, bn) for data_axis=0.
+    d2:   distance tile with data points along ``data_axis``.
+    Returns the k smallest per query, ascending along ``data_axis``.
+    """
+    ax = data_axis
+    k = best.shape[ax]
+    c = jnp.concatenate([best, d2], axis=ax)
+    inf = jnp.asarray(jnp.inf, c.dtype)
+    outs = []
+    for _ in range(k):
+        v = jnp.min(c, axis=ax, keepdims=True)
+        outs.append(v)
+        eq = (c == v).astype(jnp.int32)
+        first = (jnp.cumsum(eq, axis=ax) == 1) & (eq == 1)
+        c = jnp.where(first, inf, c)
+    return jnp.concatenate(outs, axis=ax)
+
+
+def alpha_from_best(best, m_real: int, area: float, params: AIDWParams, data_axis: int):
+    """r_obs -> R(S0) -> mu -> alpha (Eq. 2-6), per query column/row.
+
+    Returns alpha with keepdims (``(bn, 1)`` or ``(1, bn)``).
+    """
+    r_obs = jnp.mean(jnp.sqrt(best), axis=data_axis, keepdims=True)
+    return adaptive_alpha(r_obs, m_real, area, params)
+
+
+def weight_tile(d2, dz, alpha_half, data_axis: int):
+    """One tile of the weighting pass: returns (sum_w, sum_wz, tile_min, tile_hit_z),
+    all keepdims along ``data_axis``.
+
+    ``dz`` must broadcast against ``d2`` ( (1, bm) or (bm, 1) ), ``alpha_half``
+    is the per-query half-power ((bn,1)/(1,bn)).
+    """
+    ax = data_axis
+    dtype = d2.dtype
+    tiny = jnp.asarray(1e-30 if dtype == jnp.float32 else 1e-290, dtype)
+    w = jnp.exp(-alpha_half * jnp.log(jnp.maximum(d2, tiny)))
+    sum_w = jnp.sum(w, axis=ax, keepdims=True)
+    sum_wz = jnp.sum(w * dz, axis=ax, keepdims=True)
+    tile_min = jnp.min(d2, axis=ax, keepdims=True)
+    eq = (d2 == tile_min).astype(jnp.int32)
+    first = (jnp.cumsum(eq, axis=ax) == 1) & (eq == 1)
+    zeros = jnp.zeros_like(w)
+    tile_hit_z = jnp.sum(jnp.where(first, dz + zeros, zeros), axis=ax, keepdims=True)
+    return sum_w, sum_wz, tile_min, tile_hit_z

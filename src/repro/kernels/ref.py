@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are intentionally memory-naive (full (n, m) distance matrix) — the
+ground truth each Pallas kernel is asserted against across shape/dtype sweeps
+in ``tests/kernels``.
+"""
+
+from __future__ import annotations
+
+from repro.core.aidw import AIDWParams, aidw_reference
+from repro.core.idw import idw_reference
+from repro.core.layouts import aoas_to_soa
+
+
+def aidw_ref(dx, dy, dz, qx, qy, params: AIDWParams, area: float):
+    """Oracle for aidw_{naive,tiled,fused} (SoA). Returns (z_hat, alpha)."""
+    return aidw_reference(dx, dy, dz, qx, qy, params, area=area)
+
+
+def aidw_ref_aoas(data_aoas, qx, qy, params: AIDWParams, area: float):
+    """Oracle for the AoaS kernels: unpacks the (m, 4) struct array first.
+
+    Layout must not change the maths — the oracle is layout-independent.
+    """
+    dx, dy, dz = aoas_to_soa(data_aoas)
+    return aidw_reference(dx, dy, dz, qx, qy, params, area=area)
+
+
+def idw_ref(dx, dy, dz, qx, qy, alpha: float):
+    """Oracle for idw_tiled. Returns z_hat."""
+    return idw_reference(dx, dy, dz, qx, qy, alpha)

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Function (not module constant) so importing never touches jax device state —
+the dry-run sets XLA_FLAGS before its first jax call and only then builds the
+mesh.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the cross-DCN "pod" axis
+    (2 pods = 512 chips).  Uses the first prod(shape) devices so the
+    single-pod mesh also builds under the 512-device dry-run flag."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()[:need]
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(jax.devices())} "
+            "(the dry-run sets --xla_force_host_platform_device_count=512)"
+        )
+    return jax.make_mesh(shape, axes, devices=devs)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for simulated-device tests."""
+    need = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need])

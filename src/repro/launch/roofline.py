@@ -1,0 +1,259 @@
+"""Roofline analysis (deliverable g) over the dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197e12           (bf16 peak per chip)
+  memory     = HLO_bytes_per_device / 819e9            (HBM bandwidth)
+  collective = collective_bytes_per_device / 50e9      (one ICI link)
+
+Sources: ``compiled.cost_analysis()`` (flops, bytes accessed — note: XLA's
+"bytes accessed" is HLO-level operand traffic, an upper bound on post-fusion
+HBM traffic) and the collective census parsed from ``compiled.as_text()``
+(output-shape bytes per collective op).  The dominant term is the projected
+bottleneck; MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is
+"useful" (catches remat and dispatch overhead).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+      [--csv artifacts/roofline.csv] [--md artifacts/roofline.md]
+  PYTHONPATH=src python -m repro.launch.roofline --compare A.json B.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link (1 link assumed; see EXPERIMENTS §Roofline)
+
+SUGGEST = {
+    "collective": "cut collective bytes (fewer FSDP re-gathers per step, TP->EP resharding, bf16-compressed cross-pod grads)",
+    "memory": "raise arithmetic intensity (fusion, flash-style attention blocking, less remat recompute, smaller caches)",
+    "compute": "already compute-bound: push MXU utilisation (layouts, larger per-step batch, fewer transcendentals)",
+}
+
+
+def active_params(cfg) -> float:
+    """Parameter count with MoE experts scaled to the activated fraction.
+    Embedding counted once (standing in for the unembed matmul)."""
+    from repro.models import build_model
+    from repro.models import params as pm
+
+    model = build_model(cfg)
+    spec = model.spec()
+    leaves, _ = pm._flatten(spec)
+    total = 0.0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        if "experts" in s.axes and cfg.n_experts:
+            n *= cfg.moe_top_k / cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    """Analytic useful-FLOPs per step (GLOBAL, all devices)."""
+    from repro.configs import get_arch, get_shape
+
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    n_act = active_params(cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    def attn_flops(tokens, kv_len, batch):
+        if cfg.n_heads == 0:
+            return 0.0
+        per_layer = 4 * cfg.n_heads * cfg.head_dim * kv_len  # qk^T + a*v per token
+        n_attn_layers = sum(
+            sum(1 for kind in g.pattern if kind[0] in ("attn", "local", "bidir")) * g.repeats
+            for g in cfg.groups
+        ) + cfg.n_enc_layers
+        return per_layer * n_attn_layers * tokens * batch
+
+    if shape.kind == "train":
+        d_tokens = b * s
+        return 6 * n_act * d_tokens + 3 * attn_flops(s, s / 2, b)
+    if shape.kind == "prefill":
+        d_tokens = b * s
+        return 2 * n_act * d_tokens + attn_flops(s, s / 2, b)
+    # decode / long: one token against a seq_len cache
+    return 2 * n_act * b + attn_flops(1, s, b)
+
+
+def analyze(record: dict, costmodel: dict | None = None) -> dict | None:
+    if record.get("status") != "ok":
+        return None
+    devices = record["devices"]
+    ca = record.get("cost_analysis", {})
+    flops_dev = ca.get("flops", 0.0)
+    bytes_dev = ca.get("bytes accessed", 0.0)
+    coll_dev = record.get("collectives", {}).get("total_bytes", 0)
+    corrected = False
+    if costmodel and costmodel.get("status") == "ok":
+        # loop-corrected totals (see launch/costmodel.py: XLA counts while
+        # bodies once; scanned stacks must be reconstructed)
+        flops_dev = costmodel["corrected"]["flops"]
+        bytes_dev = costmodel["corrected"]["bytes_accessed"]
+        coll_dev = costmodel["corrected"]["collectives"]["total_bytes"]
+        corrected = True
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    out = {
+        "arch": record["arch"],
+        "shape": record["shape"],
+        "mesh": record["mesh"],
+        "devices": devices,
+        "loop_corrected": corrected,
+        "flops_per_dev": flops_dev,
+        "bytes_per_dev": bytes_dev,
+        "coll_bytes_per_dev": coll_dev,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "suggestion": SUGGEST[dominant],
+    }
+    if record.get("kind") != "aidw":
+        try:
+            mf = model_flops(record["arch"], record["shape"])
+            out["model_flops"] = mf
+            out["useful_ratio"] = mf / (flops_dev * devices) if flops_dev else 0.0
+            # roofline fraction: useful flops per second at the bound vs peak
+            step_s = max(terms.values())
+            out["mfu_at_bound"] = mf / devices / step_s / PEAK_FLOPS if step_s else 0.0
+        except Exception as e:  # pragma: no cover
+            out["model_flops_error"] = repr(e)
+    else:
+        w = record.get("workload", {})
+        if w:
+            out.update(_aidw_analytic(record, w, devices))
+    return out
+
+
+# v5e VPU f32 (the AIDW kernels are f32 vector code, not MXU bf16)
+PEAK_VPU = PEAK_FLOPS / 4
+
+
+def _aidw_analytic(record, w, devices):
+    """Analytic roofline for the AIDW cells.  The compiled numbers cannot be
+    used directly: the ring fori_loop and the chunked fold scans are while
+    loops (counted once).  All three terms follow closed forms — the compile
+    itself is the schedulability proof.
+
+    flops/pair: 7 distance + 3k merge (amortised) + 7 distance + 8 weight.
+    """
+    m, n, k = w["m"], w["n"], w["k"]
+    mode = w.get("mode", "ring")
+    pairs_dev = (n / devices) * m
+    flops_dev = (7 + 3 * k + 7 + 8) * pairs_dev
+    # HBM: each data point re-read once per resident query chunk, two sweeps
+    q_chunk = 1024
+    hbm_dev = (n / devices / q_chunk) * m * (8 + 12)
+    if mode == "ring":
+        # nshards rotations x (m/nshards) points x (x,y | x,y,z) f32
+        coll_dev = m * (8 + 12)
+    elif mode == "ring_q":
+        # nshards rotations x (n/nshards) queries x (q+best | q+partials) f32
+        coll_dev = n * ((2 + k) * 4 + 7 * 4)
+    else:
+        coll_dev = 0.0
+    compute_s = flops_dev / PEAK_VPU
+    memory_s = hbm_dev / HBM_BW
+    coll_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dom = max(terms, key=terms.get)
+    mf = 29.0 * m * n  # useful pair work (both sweeps + weights, excl. merge)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom,
+        "bound_s": terms[dom],
+        "model_flops": mf,
+        "useful_ratio": mf / (flops_dev * devices),
+        "mfu_at_bound": mf / devices / terms[dom] / PEAK_VPU if terms[dom] else 0.0,
+        "analytic": True,
+        "suggestion": SUGGEST[dom],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"))
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--mesh", default="single", help="mesh for the main table (single|multi|both)")
+    ap.add_argument("--compare", nargs=2, default=None, metavar=("BASE", "NEW"))
+    args = ap.parse_args()
+
+    def load_cell(path):
+        rec = json.load(open(path))
+        cm_path = os.path.join(os.path.dirname(path), "..", "costmodel", os.path.basename(path))
+        cm = json.load(open(cm_path)) if os.path.exists(cm_path) else None
+        return analyze(rec, cm)
+
+    if args.compare:
+        base = load_cell(args.compare[0])
+        new = load_cell(args.compare[1])
+        for k in ("compute_s", "memory_s", "collective_s", "bound_s"):
+            b, n = base[k], new[k]
+            d = (n - b) / b * 100 if b else float("nan")
+            print(f"{k:14s} {b:10.4f} -> {n:10.4f}  ({d:+.1f}%)")
+        print(f"dominant: {base['dominant']} -> {new['dominant']}")
+        return
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        r = load_cell(f)
+        if r and (args.mesh == "both" or r["mesh"] == args.mesh):
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    hdr = f"{'arch':22s} {'shape':12s} {'mesh':6s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} {'useful':>7s} {'MFU@bound':>9s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {r.get('useful_ratio', float('nan')):7.2f} "
+            f"{r.get('mfu_at_bound', float('nan')):9.3f}"
+        )
+
+    if args.csv:
+        import csv
+
+        keys = ["arch", "shape", "mesh", "devices", "flops_per_dev", "bytes_per_dev",
+                "coll_bytes_per_dev", "compute_s", "memory_s", "collective_s",
+                "dominant", "model_flops", "useful_ratio", "mfu_at_bound", "suggestion"]
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {args.csv}")
+
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | useful ratio | MFU@bound |\n")
+            f.write("|---|---|---|---|---|---|---|---|---|\n")
+            for r in rows:
+                f.write(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.4f} "
+                    f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} | **{r['dominant']}** "
+                    f"| {r.get('useful_ratio', float('nan')):.2f} | {r.get('mfu_at_bound', float('nan')):.3f} |\n"
+                )
+        print(f"wrote {args.md}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""GQA attention with sliding-window, cross-attention, RoPE/M-RoPE and a
+(train | prefill | decode) cache protocol.
+
+Cache layout: {"k": (B, S_max, KV, hd), "v": ...} in bf16.  Decode writes the
+new token at position ``pos`` via dynamic_update_slice and attends over the
+full cache with an iota mask — the cache's ``S_max`` axis carries the
+"cache_seq" logical axis so the decode/long rule sets context-parallelise it
+(GSPMD inserts the partial-softmax all-reduce).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, dense
+from repro.models.params import ParamSpec, dense_spec
+from repro.sharding.rules import logical_constraint
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attn_spec(cfg, d_in: int | None = None, n_heads: int | None = None, head_dim: int | None = None):
+    d = d_in if d_in is not None else cfg.d_model
+    nh = n_heads if n_heads is not None else cfg.n_heads
+    hd = head_dim if head_dim is not None else cfg.head_dim
+    nkv = cfg.n_kv_heads if n_heads is None else nh  # overridden heads => MHA
+    return {
+        "wq": dense_spec(d, nh * hd, ("embed", "heads"), bias=cfg.qkv_bias),
+        "wk": dense_spec(d, nkv * hd, ("embed", "kv"), bias=cfg.qkv_bias),
+        "wv": dense_spec(d, nkv * hd, ("embed", "kv"), bias=cfg.qkv_bias),
+        "wo": dense_spec(nh * hd, d, ("heads", "embed")),
+    }
+
+
+def _split_heads(x, n):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _attend(q, k, v, mask):
+    """q (B,S,Hq,hd), k/v (B,T,KV,hd), mask broadcastable to (B,KV,G,S,T).
+    Softmax in f32."""
+    b, s, hq, hd = q.shape
+    kv = k.shape[2]
+    g = hq // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(hd))
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return o.reshape(b, s, hq * hd)
+
+
+def _causal_mask(s, t, window):
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (s, t), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (s, t), 1)
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m[None, None, None]  # (1,1,1,S,T)
+
+
+def _decode_mask(t, pos, window):
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    m = kpos <= pos
+    if window is not None:
+        m = m & (kpos > pos - window)
+    return m[None, None, None]  # (1,1,1,1,T)
+
+
+def attention(
+    p,
+    x,
+    *,
+    cfg,
+    mode: str,
+    positions=None,
+    mrope_positions=None,
+    window: int | None = None,
+    causal: bool = True,
+    use_rope: bool = True,
+    cache=None,
+    pos=None,
+    kv_x=None,
+    cache_dtype=jnp.bfloat16,
+    n_heads: int | None = None,
+    static_kv: bool = False,
+):
+    """Returns (out, new_cache).  new_cache is None in train mode.
+
+    kv_x: source of K/V for cross-attention (encoder output).  In decode
+    mode with kv_x=None the cache is read+updated; cross caches (encoder
+    K/V precomputed at prefill) are read-only: pass static_kv=True.
+    """
+    b, s, _ = x.shape
+    nh = n_heads if n_heads is not None else cfg.n_heads
+    q = _split_heads(dense(p["wq"], x), nh)
+    hd = q.shape[-1]
+
+    if static_kv:  # cross-attn decode against a frozen cache
+        k, v = cache["k"], cache["v"]
+        k = k.astype(x.dtype)
+        v = v.astype(x.dtype)
+        mask = jnp.ones((1, 1, 1, s, k.shape[1]), bool)
+        o = _attend(q, k, v, mask)
+        return dense(p["wo"], o), cache
+
+    src = kv_x if kv_x is not None else x
+    kv_heads = p["wk"]["w"].shape[1] // hd
+    k = _split_heads(dense(p["wk"], src), kv_heads)
+    v = _split_heads(dense(p["wv"], src), kv_heads)
+
+    if use_rope and kv_x is None:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode" and cache is not None:
+        # write the new token, attend over the cache.  A cache shorter than
+        # the sequence is a RING BUFFER (windowed local-attention layers):
+        # slot = pos % L holds exactly the last L positions — attention is
+        # permutation-invariant over keys, so slot order never matters, and
+        # the recency window is enforced by the buffer size itself.
+        t = cache["k"].shape[1]
+        write_pos = jnp.remainder(pos, t) if window is not None and t <= window else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if window is not None and t <= window:
+            # ring buffer: all resident slots are in-window; mask only the
+            # not-yet-written slots (iota <= pos is all-true once pos >= t)
+            mask = _decode_mask(t, pos, None)
+        else:
+            mask = _decode_mask(t, pos, window)
+        o = _attend(q, ck.astype(x.dtype), cv.astype(x.dtype), mask)
+        return dense(p["wo"], o), new_cache
+
+    # train / prefill (full sequence)
+    t = k.shape[1]
+    if kv_x is not None or not causal:
+        mask = jnp.ones((1, 1, 1, s, t), bool)
+    else:
+        mask = _causal_mask(s, t, window)
+    o = _attend(q, k, v, mask)
+    o = logical_constraint(o, ("batch", "seq", "heads"))
+    out = dense(p["wo"], o)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+    return out, new_cache
+
+
+def init_cache_spec(cfg, batch: int, seq: int, *, n_heads=None, head_dim=None):
+    """ShapeDtypeStruct + logical axes for one layer's KV cache."""
+    kv = cfg.n_kv_heads if n_heads is None else n_heads
+    hd = head_dim if head_dim is not None else cfg.head_dim
+    shape = (batch, seq, kv, hd)
+    axes = ("batch", "cache_seq", "kv", None)
+    return shape, axes

@@ -1,0 +1,121 @@
+"""Transformer / Mamba / shared-hybrid blocks (pre-norm residual)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attn_spec, attention
+from repro.models.layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
+from repro.models.params import ParamSpec
+from repro.models.mamba2 import mamba, mamba_cache_spec, mamba_dims, mamba_spec
+from repro.models.moe import moe, moe_spec
+from repro.sharding.rules import logical_constraint
+
+ZERO_AUX = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def block_spec(cfg, kind):
+    mixer, ff = kind
+    s = {}
+    if mixer == "mamba":
+        s["norm"] = rmsnorm_spec(cfg.d_model)
+        s["mixer"] = mamba_spec(cfg)
+    else:
+        s["ln1"] = rmsnorm_spec(cfg.d_model)
+        s["attn"] = attn_spec(cfg)
+    if ff == "dense":
+        s["ln2"] = rmsnorm_spec(cfg.d_model)
+        s["mlp"] = mlp_spec(cfg.d_model, cfg.d_ff, cfg.act)
+    elif ff == "moe":
+        s["ln2"] = rmsnorm_spec(cfg.d_model)
+        s["moe"] = moe_spec(cfg)
+    return s
+
+
+def block_cache_spec(cfg, kind, batch: int, seq: int):
+    """(shape, logical_axes, dtype) leaves for one layer's decode cache.
+
+    Sliding-window layers with cfg.windowed_cache hold a window-sized ring
+    buffer instead of the full sequence (§Perf iteration E: 6x cache memory
+    on gemma3 long_500k — 52 of 62 layers only ever attend 1024 back)."""
+    mixer, _ = kind
+    if mixer == "mamba":
+        return mamba_cache_spec(cfg, batch)
+    cache_len = seq
+    if mixer == "local" and cfg.windowed_cache and cfg.sliding_window:
+        cache_len = min(seq, cfg.sliding_window)
+    kvshape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("batch", "cache_seq", "kv", None)
+    return {"k": (kvshape, axes, jnp.bfloat16), "v": (kvshape, axes, jnp.bfloat16)}
+
+
+def block_apply(p, x, kind, *, cfg, mode, cache=None, pos=None, positions=None, mrope_positions=None):
+    """Returns (x, new_cache, aux)."""
+    mixer, ff = kind
+    aux = ZERO_AUX
+    if mixer == "mamba":
+        h, new_cache = mamba(p["mixer"], rmsnorm(p["norm"], x, cfg.norm_eps), cfg, mode=mode, cache=cache)
+        x = x + h
+    else:
+        window = cfg.sliding_window if mixer == "local" else None
+        h, new_cache = attention(
+            p["attn"],
+            rmsnorm(p["ln1"], x, cfg.norm_eps),
+            cfg=cfg,
+            mode=mode,
+            positions=positions,
+            mrope_positions=mrope_positions,
+            window=window,
+            causal=(mixer != "bidir"),
+            use_rope=cfg.use_rope,
+            cache=cache,
+            pos=pos,
+        )
+        x = x + h
+    if ff == "dense":
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.act)
+    elif ff == "moe":
+        h, aux = moe(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        x = x + h
+    x = logical_constraint(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, aux
+
+
+# ------------------------------------------------- Zamba-style shared block
+def shared_block_spec(cfg):
+    """One set of weights, applied at every shared_prefix group: attention +
+    GLU MLP over concat(hidden, initial_embedding) (width 2*d_model), with a
+    down-projection back into the residual stream."""
+    d2 = cfg.shared_d
+    return {
+        "ln1": rmsnorm_spec(d2),
+        "attn": attn_spec(cfg, d_in=d2, n_heads=cfg.n_heads, head_dim=cfg.shared_head_dim),
+        "ln2": rmsnorm_spec(d2),
+        "mlp": mlp_spec(d2, cfg.d_ff, cfg.act),
+        "down": {"w": ParamSpec((d2, cfg.d_model), ("heads", "embed"), "normal", d2**-0.5)},
+    }
+
+
+def shared_block_cache_spec(cfg, batch: int, seq: int):
+    kvshape = (batch, seq, cfg.n_heads, cfg.shared_head_dim)
+    axes = ("batch", "cache_seq", "kv", None)
+    return {"k": (kvshape, axes, jnp.bfloat16), "v": (kvshape, axes, jnp.bfloat16)}
+
+
+def shared_block_apply(p, x, x0, *, cfg, mode, cache=None, pos=None, positions=None):
+    """u = [x ; x0] -> attn -> mlp -> down-projected into the residual."""
+    u = jnp.concatenate([x, x0], axis=-1)
+    h, new_cache = attention(
+        p["attn"],
+        rmsnorm(p["ln1"], u, cfg.norm_eps),
+        cfg=cfg,
+        mode=mode,
+        positions=positions,
+        cache=cache,
+        pos=pos,
+        n_heads=cfg.n_heads,
+    )
+    u = u + h
+    u = u + mlp(p["mlp"], rmsnorm(p["ln2"], u, cfg.norm_eps), cfg.act)
+    x = x + u @ p["down"]["w"]
+    return x, new_cache

@@ -1,0 +1,133 @@
+"""Common neural-net layers (functional: spec() builders + apply functions).
+
+All applies take plain array trees produced from the matching spec; compute
+dtype is whatever the caller cast the params/activations to (bf16 in the
+production steps), with norms and softmax internally upcast to f32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, dense_spec
+from repro.sharding.rules import logical_constraint
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_spec(d: int):
+    return {"scale": ParamSpec((d,), (None,), "ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(d: int):
+    return {"scale": ParamSpec((d,), (None,), "ones"), "bias": ParamSpec((d,), (None,), "zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- dense
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------- embeddings
+def embedding_spec(vocab: int, d: int):
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), "normal", 0.02)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied unembedding: logits in f32 (the long-reduction softmax path)."""
+    return (x @ p["table"].T.astype(x.dtype)).astype(jnp.float32)
+
+
+def sinusoidal_positions(seq_len: int, d: int, dtype=jnp.float32, offset=0):
+    # offset may be a traced scalar (decode position)
+    pos = (jnp.arange(seq_len, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def _rope_angles(positions, half: int, theta: float):
+    # positions (..., S) -> (..., S, half)
+    freqs = jnp.power(theta, -jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S)."""
+    half = x.shape[-1] // 2
+    ang = _rope_angles(positions, half, theta)  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def apply_mrope(x, positions, sections, theta: float = 10000.0):
+    """M-RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w) streams; the
+    rotary half-dim is split into ``sections`` (summing to head_dim//2), each
+    section driven by its own position stream."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.power(theta, -jnp.arange(half, dtype=jnp.float32) / half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        ang = positions[i].astype(jnp.float32)[..., None] * freqs[start : start + sec]
+        parts.append(ang)
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ----------------------------------------------------------------- MLP / GLU
+def mlp_spec(d: int, d_ff: int, act: str = "swiglu"):
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_spec(d, d_ff, ("embed", "mlp")),
+            "wi_up": dense_spec(d, d_ff, ("embed", "mlp")),
+            "wo": dense_spec(d_ff, d, ("mlp", "embed")),
+        }
+    return {
+        "wi": dense_spec(d, d_ff, ("embed", "mlp")),
+        "wo": dense_spec(d_ff, d, ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["wi_gate"], x)) * dense(p["wi_up"], x)
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(p["wi_gate"], x), approximate=True) * dense(p["wi_up"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x), approximate=True)
+    h = logical_constraint(h, ("batch", "seq", "mlp"))
+    return dense(p["wo"], h)

@@ -1,0 +1,399 @@
+"""Top-level models: DecoderLM (dense/MoE/SSM/hybrid/VLM) and EncDecLM
+(Whisper-family).
+
+Layers are organised as scanned stacks (``GroupDef``): parameters carry a
+leading "layers" axis and the forward pass is a ``lax.scan`` over groups —
+compile time is O(distinct group shapes), not O(n_layers), which is what
+makes the 80-layer dry-runs tractable.
+
+``apply`` returns final *hidden states*; logits/loss materialisation is the
+step functions' business (so the (B, S, V) f32 tensor never exists in decode,
+and the train step can chunk it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, GroupDef
+from repro.models import params as pm
+from repro.models.attention import attn_spec, attention
+from repro.models.blocks import (
+    ZERO_AUX,
+    block_apply,
+    block_cache_spec,
+    block_spec,
+    shared_block_apply,
+    shared_block_cache_spec,
+    shared_block_spec,
+)
+from repro.models.layers import (
+    embed,
+    mlp,
+    mlp_spec,
+    rmsnorm,
+    rmsnorm_spec,
+    sinusoidal_positions,
+)
+from repro.sharding.rules import logical_constraint
+
+
+def _add_aux(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def cast_params(p, dtype=jnp.bfloat16):
+    """Cast float params to the compute dtype (master copies stay f32 in the
+    optimizer; norms/softmax/SSM decays re-upcast internally)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, p
+    )
+
+
+def _group_spec(cfg, gdef: GroupDef):
+    return {f"l{i}": block_spec(cfg, kind) for i, kind in enumerate(gdef.pattern)}
+
+
+def _group_cache_spec(cfg, gdef: GroupDef, batch, seq):
+    out = {}
+    for i, kind in enumerate(gdef.pattern):
+        out[f"l{i}"] = block_cache_spec(cfg, kind, batch, seq)
+    if gdef.shared_prefix:
+        out["shared"] = shared_block_cache_spec(cfg, batch, seq)
+    return out
+
+
+def _stack_leaves(tree, n):
+    """(shape, axes, dtype) leaves -> stacked with a leading layers dim."""
+
+    def one(leaf):
+        shape, axes, dtype = leaf
+        return ((n,) + shape, ("layers",) + axes, dtype)
+
+    return jax.tree.map(one, tree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple))
+
+
+class DecoderLM:
+    """Decoder-only LM over ``cfg.groups`` (+ optional shared hybrid block,
+    VLM patch-embedding merge, M-RoPE)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- specs
+    def spec(self):
+        cfg = self.cfg
+        s = {
+            "embed": {"table": pm.ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", 0.02)},
+            "ln_f": rmsnorm_spec(cfg.d_model),
+            "stacks": {
+                f"g{i}": pm.stack(_group_spec(cfg, g), g.repeats)
+                for i, g in enumerate(cfg.groups)
+            },
+        }
+        if cfg.shared_block:
+            s["shared"] = shared_block_spec(cfg)
+        if not cfg.tie_embeddings:
+            s["unembed"] = {"w": pm.ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), "normal", cfg.d_model**-0.5)}
+        return s
+
+    def cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        return {
+            f"g{i}": _stack_leaves(_group_cache_spec(cfg, g, batch, seq), g.repeats)
+            for i, g in enumerate(cfg.groups)
+        }
+
+    # -------------------------------------------------------------- forward
+    def _embed_inputs(self, p, tokens, extra, mode, pos):
+        cfg = self.cfg
+        x = embed(p["embed"], tokens)
+        if cfg.n_vis_tokens and extra is not None and "visual_embeds" in extra and mode != "decode":
+            vis = extra["visual_embeds"].astype(x.dtype)  # (B, n_vis, d) patch stub
+            x = jnp.concatenate([vis, x[:, cfg.n_vis_tokens :, :]], axis=1)
+        return x
+
+    def _positions(self, tokens, mode, pos, extra):
+        cfg = self.cfg
+        b, s = tokens.shape
+        if mode == "decode":
+            positions = jnp.full((b, s), pos, jnp.int32)
+            mrope = (
+                jnp.full((3, b, s), pos, jnp.int32) if cfg.mrope_sections else None
+            )
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+            mrope = None
+            if cfg.mrope_sections:
+                if extra is not None and "mrope_positions" in extra:
+                    mrope = extra["mrope_positions"]
+                else:
+                    mrope = jnp.broadcast_to(positions[None], (3, b, s))
+        return positions, mrope
+
+    def apply(self, p, tokens, *, mode: str = "train", caches=None, pos=None, extra=None, remat: bool = False, unroll: bool = False):
+        """tokens (B, S) int32 -> (hidden (B,S,d), new_caches, aux).
+
+        unroll=True replaces the layer lax.scans with python loops — used by
+        the dry-run cost-model pass only (XLA cost analysis counts while
+        bodies once, so scanned stacks must be unrolled to be counted)."""
+        cfg = self.cfg
+        p = cast_params(p)
+        x = self._embed_inputs(p, tokens, extra, mode, pos).astype(jnp.bfloat16)
+        x = logical_constraint(x, ("batch", "seq", "act_embed"))
+        positions, mrope = self._positions(tokens, mode, pos, extra)
+        x0 = x  # initial embedding (Zamba shared-block input)
+        aux = ZERO_AUX
+        new_caches = {}
+
+        for gi, gdef in enumerate(cfg.groups):
+            gname = f"g{gi}"
+            stack_params = p["stacks"][gname]
+            stack_caches = caches[gname] if caches is not None else None
+
+            def group_body(carry, scanned, gdef=gdef):
+                xc, auxc = carry
+                gp = scanned["params"]
+                gc = scanned.get("cache")
+                newc = {}
+                if gdef.shared_prefix:
+                    xc, sc = shared_block_apply(
+                        p["shared"], xc, x0, cfg=cfg, mode=mode,
+                        cache=(gc or {}).get("shared"), pos=pos, positions=positions,
+                    )
+                    if sc is not None:
+                        newc["shared"] = sc
+                for i, kind in enumerate(gdef.pattern):
+                    xc, c, a = block_apply(
+                        gp[f"l{i}"], xc, kind, cfg=cfg, mode=mode,
+                        cache=(gc or {}).get(f"l{i}"), pos=pos,
+                        positions=positions, mrope_positions=mrope,
+                    )
+                    if c is not None:
+                        newc[f"l{i}"] = c
+                    auxc = _add_aux(auxc, a)
+                return (xc, auxc), newc
+
+            body = jax.checkpoint(group_body) if remat else group_body
+            xs = {"params": stack_params}
+            if stack_caches is not None:
+                xs["cache"] = stack_caches
+            if unroll:
+                outs = []
+                carry = (x, aux)
+                for j in range(gdef.repeats):
+                    carry, nc = body(carry, jax.tree.map(lambda a: a[j], xs))
+                    outs.append(nc)
+                (x, aux) = carry
+                newc = (
+                    jax.tree.map(lambda *ls: jnp.stack(ls), *outs) if outs and outs[0] else {}
+                )
+            elif mode == "decode" and stack_caches is not None:
+                # decode: carry the WHOLE stacked cache and update in place —
+                # as a scan carry the buffer aliases under donation (as ys it
+                # would double-buffer: +cache-size temp memory per step)
+                def group_body_carry(carry, scanned, gdef=gdef):
+                    xc, auxc, call = carry
+                    j = scanned["idx"]
+                    gc = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False), call
+                    )
+                    (xc, auxc), newc = group_body((xc, auxc), {"params": scanned["params"], "cache": gc})
+                    call = jax.tree.map(
+                        lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n.astype(a.dtype), j, 0),
+                        call, newc,
+                    )
+                    return (xc, auxc, call), ()
+
+                idxs = jnp.arange(gdef.repeats, dtype=jnp.int32)
+                (x, aux, newc), _ = jax.lax.scan(
+                    group_body_carry, (x, aux, stack_caches), {"params": stack_params, "idx": idxs}
+                )
+            else:
+                (x, aux), newc = jax.lax.scan(body, (x, aux), xs)
+            if newc:
+                new_caches[gname] = newc
+
+        x = rmsnorm(p["ln_f"], x, cfg.norm_eps)
+        return x, (new_caches if new_caches else None), aux
+
+    def logits(self, p, hidden):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = p["embed"]["table"].T.astype(hidden.dtype)
+        else:
+            w = p["unembed"]["w"].astype(hidden.dtype)
+        out = hidden @ w
+        out = logical_constraint(out, ("batch", "seq", "vocab"))
+        return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- Enc-Dec
+class EncDecLM:
+    """Whisper-family encoder-decoder.  The audio conv frontend is a STUB per
+    the assignment: inputs are precomputed frame embeddings (B, S_enc, d);
+    sinusoidal positions on both sides, no RoPE (matching Whisper)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def _enc_block_spec(self):
+        cfg = self.cfg
+        return {
+            "ln1": rmsnorm_spec(cfg.d_model),
+            "attn": attn_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff, cfg.act),
+        }
+
+    def _dec_block_spec(self):
+        cfg = self.cfg
+        return {
+            "ln1": rmsnorm_spec(cfg.d_model),
+            "attn": attn_spec(cfg),
+            "lnx": rmsnorm_spec(cfg.d_model),
+            "cross": attn_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff, cfg.act),
+        }
+
+    def spec(self):
+        cfg = self.cfg
+        n_dec = cfg.n_layers
+        return {
+            "embed": {"table": pm.ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", 0.02)},
+            "enc_stack": pm.stack(self._enc_block_spec(), cfg.n_enc_layers),
+            "enc_ln_f": rmsnorm_spec(cfg.d_model),
+            "dec_stack": pm.stack(self._dec_block_spec(), n_dec),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+        }
+
+    def cache_spec(self, batch: int, seq: int, enc_seq: int | None = None):
+        cfg = self.cfg
+        n_dec = cfg.n_layers
+        enc_seq = enc_seq if enc_seq is not None else seq
+        kvshape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        xshape = (batch, enc_seq, cfg.n_kv_heads, cfg.head_dim)
+        axes = ("batch", "cache_seq", "kv", None)
+        one = {
+            "self": {"k": (kvshape, axes, jnp.bfloat16), "v": (kvshape, axes, jnp.bfloat16)},
+            "cross": {"k": (xshape, axes, jnp.bfloat16), "v": (xshape, axes, jnp.bfloat16)},
+        }
+        return _stack_leaves({"layers": one}, n_dec)
+
+    def encode(self, p, frames, remat: bool = False, unroll: bool = False):
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        x = logical_constraint(x, ("batch", "seq", "act_embed"))
+
+        def body(carry, gp):
+            xc = carry
+            h, _ = attention(
+                gp["attn"], rmsnorm(gp["ln1"], xc, cfg.norm_eps),
+                cfg=cfg, mode="train", causal=False, use_rope=False,
+            )
+            xc = xc + h
+            xc = xc + mlp(gp["mlp"], rmsnorm(gp["ln2"], xc, cfg.norm_eps), cfg.act)
+            return xc, ()
+
+        body = jax.checkpoint(body) if remat else body
+        if unroll:
+            for j in range(cfg.n_enc_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[j], p["enc_stack"]))
+        else:
+            x, _ = jax.lax.scan(body, x, p["enc_stack"])
+        return rmsnorm(p["enc_ln_f"], x, cfg.norm_eps)
+
+    def apply(self, p, tokens, *, mode="train", frames=None, caches=None, pos=None, extra=None, remat=False, unroll=False):
+        """Decoder pass.  train/prefill: frames required (encoder runs).
+        decode: caches carry self+cross K/V; frames unused."""
+        cfg = self.cfg
+        p = cast_params(p)
+        enc_out = None
+        if mode in ("train", "prefill"):
+            if frames is None and extra is not None:
+                frames = extra.get("frames")
+            enc_out = self.encode(p, frames, remat=remat, unroll=unroll)
+
+        x = embed(p["embed"], tokens).astype(jnp.bfloat16)
+        if mode == "decode":
+            x = x + sinusoidal_positions(1, cfg.d_model, x.dtype, offset=pos)[None]
+        else:
+            x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+        def body(carry, scanned):
+            xc = carry
+            gp = scanned["params"]
+            gc = scanned.get("cache")
+            newc = {}
+            h, selfc = attention(
+                gp["attn"], rmsnorm(gp["ln1"], xc, cfg.norm_eps),
+                cfg=cfg, mode=mode, causal=True, use_rope=False,
+                cache=(gc or {}).get("self"), pos=pos,
+            )
+            xc = xc + h
+            if selfc is not None:
+                newc["self"] = selfc
+            if mode == "decode":
+                h, _ = attention(
+                    gp["cross"], rmsnorm(gp["lnx"], xc, cfg.norm_eps),
+                    cfg=cfg, mode=mode, causal=False, use_rope=False,
+                    cache=gc["cross"], static_kv=True,
+                )
+                newc["cross"] = gc["cross"]
+            else:
+                h, crossc = attention(
+                    gp["cross"], rmsnorm(gp["lnx"], xc, cfg.norm_eps),
+                    cfg=cfg, mode=mode, causal=False, use_rope=False, kv_x=enc_out,
+                )
+                if crossc is not None:
+                    newc["cross"] = crossc
+            xc = xc + h
+            xc = xc + mlp(gp["mlp"], rmsnorm(gp["ln2"], xc, cfg.norm_eps), cfg.act)
+            xc = logical_constraint(xc, ("batch", "seq", "act_embed"))
+            return xc, newc
+
+        body = jax.checkpoint(body) if (remat and mode == "train") else body
+        xs = {"params": p["dec_stack"]}
+        stack_caches = None
+        if caches is not None:
+            stack_caches = caches["layers"] if "layers" in caches else caches
+            xs["cache"] = stack_caches
+        n_dec = cfg.n_layers
+        if unroll:
+            outs = []
+            for j in range(n_dec):
+                x, nc = body(x, jax.tree.map(lambda a: a[j], xs))
+                outs.append(nc)
+            newc = jax.tree.map(lambda *ls: jnp.stack(ls), *outs) if outs and outs[0] else {}
+        elif mode == "decode" and stack_caches is not None:
+            # in-place cache carry (see DecoderLM.apply): aliases under donation
+            def body_carry(carry, scanned):
+                xc, call = carry
+                j = scanned["idx"]
+                gc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False), call
+                )
+                xc, newc = body(xc, {"params": scanned["params"], "cache": gc})
+                call = jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n.astype(a.dtype), j, 0),
+                    call, newc,
+                )
+                return (xc, call), ()
+
+            idxs = jnp.arange(n_dec, dtype=jnp.int32)
+            (x, newc), _ = jax.lax.scan(
+                body_carry, (x, stack_caches), {"params": p["dec_stack"], "idx": idxs}
+            )
+        else:
+            x, newc = jax.lax.scan(body, x, xs)
+        x = rmsnorm(p["ln_f"], x, cfg.norm_eps)
+        new_caches = {"layers": newc} if newc else None
+        return x, new_caches, ZERO_AUX
+
+    def logits(self, p, hidden):
+        out = hidden @ p["embed"]["table"].T.astype(hidden.dtype)
+        out = logical_constraint(out, ("batch", "seq", "vocab"))
+        return out.astype(jnp.float32)

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked matmul formulation: the sequence is split into chunks of Q tokens;
+within a chunk the SSM is evaluated as a masked attention-like product
+(MXU-friendly einsums), between chunks a (B, H, P, N) state is carried by a
+short scan.  Decode carries the same state with an O(1) per-token update.
+
+Layer structure follows the reference implementation:
+  in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD core over
+  (x, B, C, dt, A); gated RMSNorm (norm(y * silu(z))); out_proj.
+ngroups = 1 (B, C shared across heads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rmsnorm, rmsnorm_spec
+from repro.models.params import ParamSpec, dense_spec
+from repro.sharding.rules import logical_constraint
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return d_inner, nheads, cfg.ssm_headdim, cfg.ssm_state, conv_ch
+
+
+def mamba_spec(cfg):
+    d = cfg.d_model
+    di, h, p_, n, conv_ch = mamba_dims(cfg)
+    return {
+        "in_proj": dense_spec(d, 2 * di + 2 * n + h, ("embed", "heads")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", "heads"), "normal", 0.2),
+        "conv_b": ParamSpec((conv_ch,), ("heads",), "zeros"),
+        "A_log": ParamSpec((h,), (None,), "zeros"),  # A = -exp(A_log), init -1
+        "D": ParamSpec((h,), (None,), "ones"),
+        "dt_bias": ParamSpec((h,), (None,), "zeros"),
+        "norm": rmsnorm_spec(di),
+        "out_proj": dense_spec(di, d, ("heads", "embed")),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width W, via W shifted adds (W is 4; unrolled)."""
+    wlen = w.shape[0]
+    out = jnp.zeros_like(xbc)
+    for i in range(wlen):
+        shift = wlen - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1], :]
+        out = out + shifted * w[i]
+    return out + b
+
+
+def _segsum_decay(dacs):
+    """exp(cum_i - cum_j) masked to j <= i.  dacs: (B, C, Q, H) inclusive
+    cumsum of dA.  Returns (B, C, H, Q, Q) in f32."""
+    ci = dacs[:, :, :, None, :]  # (B,C,Q,1,H) -> i index
+    cj = dacs[:, :, None, :, :]  # (B,C,1,Q,H) -> j index
+    diff = (ci - cj).transpose(0, 1, 4, 2, 3)  # (B,C,H,Q,Q)
+    q = dacs.shape[2]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    mask = ii >= jj
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(xh, bmat, cmat, dt, a_log, *, chunk: int, init_state=None):
+    """SSD core.
+
+    xh:   (B, L, H, P)   per-head inputs
+    bmat: (B, L, N), cmat: (B, L, N)   shared across heads (ngroups=1)
+    dt:   (B, L, H)      post-softplus step sizes
+    a_log:(H,)           A = -exp(a_log)
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    b, l, h, p_ = xh.shape
+    n = bmat.shape[-1]
+    q = chunk
+    pad = (-l) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    lc = xh.shape[1]
+    nc = lc // q
+    xc = xh.reshape(b, nc, q, h, p_)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    da = dtc * a  # (B,C,Q,H)
+    cum = jnp.cumsum(da, axis=2)  # inclusive
+    dtx = (dtc[..., None] * xc.astype(jnp.float32))  # (B,C,Q,H,P)
+
+    # ---- intra-chunk (quadratic within chunk, masked) ----
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,C,Q,Q)
+    decay = _segsum_decay(cum)  # (B,C,H,Q,Q)
+    y_intra = jnp.einsum("bcij,bchij,bcjhp->bcihp", cb, decay, dtx)
+
+    # ---- chunk states ----
+    end_decay = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,C,Q,H) decay j..end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, end_decay, dtx)  # (B,C,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,C,H)
+
+    # ---- inter-chunk recurrence ----
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p_, n), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st = carry
+        s_c, dk = inp  # (B,H,P,N), (B,H)
+        entering = st
+        st = st * dk[:, :, None, None] + s_c
+        return st, entering
+
+    final, entering = jax.lax.scan(
+        step,
+        init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (B,C,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cc, jnp.exp(cum), entering)
+    y = (y_intra + y_inter).reshape(b, lc, h, p_)[:, :l]
+    return y.astype(xh.dtype), final
+
+
+def mamba(p, x, cfg, *, mode: str = "train", cache=None):
+    """x (B, L, d).  Returns (y, new_cache); cache = {"ssm": (B,H,P,N) f32,
+    "conv": (B, W-1, conv_ch)}."""
+    b, l, d = x.shape
+    di, h, p_, n, conv_ch = mamba_dims(cfg)
+    zxbcdt = dense(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_ch]
+    dt_raw = zxbcdt[..., di + conv_ch :]  # (B,L,H)
+
+    if mode == "decode":
+        # single-token step against the cache
+        conv_state = cache["conv"]  # (B, W-1, conv_ch)
+        full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)  # (B, W, ch)
+        w = p["conv_w"]
+        conv_out = jnp.einsum("bwc,wc->bc", full, w)[:, None, :] + p["conv_b"]
+        new_conv = full[:, 1:, :]
+        xbc_act = jax.nn.silu(conv_out)
+        xs = xbc_act[..., :di].reshape(b, h, p_)
+        bmat = xbc_act[..., di : di + n].reshape(b, n).astype(jnp.float32)
+        cmat = xbc_act[..., di + n :].reshape(b, n).astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dec = jnp.exp(dt * a)  # (B,H)
+        st = cache["ssm"].astype(jnp.float32)
+        dtx = dt[..., None] * xs.astype(jnp.float32)  # (B,H,P)
+        st = st * dec[:, :, None, None] + jnp.einsum("bn,bhp->bhpn", bmat, dtx)
+        y = jnp.einsum("bn,bhpn->bhp", cmat, st)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+        return dense(p["out_proj"], y), {"ssm": st, "conv": new_conv}
+
+    conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc_act = jax.nn.silu(conv_out)
+    xs = xbc_act[..., :di].reshape(b, l, h, p_)
+    bmat = xbc_act[..., di : di + n]
+    cmat = xbc_act[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y, final = ssd_scan(xs, bmat, cmat, dt, p["A_log"], chunk=cfg.ssm_chunk)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xs
+    y = y.reshape(b, l, di)
+    y = logical_constraint(y, ("batch", "seq", "heads"))
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y)
+    new_cache = None
+    if mode == "prefill":
+        new_conv = xbc[:, l - (cfg.ssm_conv - 1) :, :] if l >= cfg.ssm_conv - 1 else jnp.pad(
+            xbc, ((0, 0), (cfg.ssm_conv - 1 - l, 0), (0, 0))
+        )
+        new_cache = {"ssm": final, "conv": new_conv}
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg, batch: int):
+    """(shapes, axes) for the decode cache of one mamba layer."""
+    di, h, p_, n, conv_ch = mamba_dims(cfg)
+    return {
+        "ssm": ((batch, h, p_, n), ("batch", "heads", None, "state"), jnp.float32),
+        "conv": ((batch, cfg.ssm_conv - 1, conv_ch), ("batch", None, "heads"), jnp.bfloat16),
+    }

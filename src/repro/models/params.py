@@ -1,0 +1,97 @@
+"""Parameter-spec system.
+
+Models declare parameters as trees of :class:`ParamSpec` (shape + logical
+axes + init recipe) rather than arrays.  This gives three consumers one
+source of truth:
+
+* ``materialize``  — real arrays for smoke tests / examples / training;
+* ``abstract``     — ShapeDtypeStructs for the multi-pod dry-run (a 72B model
+  is never allocated: ``jit(train_step).lower()`` takes the abstract tree);
+* ``axes_tree``    — logical-axis tree consumed by ``repro.sharding.rules``
+  to derive NamedShardings.
+
+Logical axis vocabulary (mapped to mesh axes per workload in sharding/rules.py):
+  "embed"   — d_model-sized dims (FSDP candidate)
+  "heads"   — flattened attention projection output (n_heads*head_dim, TP)
+  "kv"      — kv-head-sized dims
+  "mlp"     — FFN hidden (TP)
+  "vocab"   — vocabulary (TP)
+  "experts" — MoE expert dim (EP)
+  "layers"  — scanned layer stacks (never sharded)
+  "state", "conv", None — small/replicated dims
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple  # logical axes, same length as shape
+    init: str = "normal"  # "normal" | "zeros" | "ones"
+    scale: float | None = None  # stddev for "normal"
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _flatten(specs):
+    return jax.tree.flatten(specs, is_leaf=is_spec)
+
+
+def materialize(specs, key, dtype=jnp.float32):
+    """Instantiate real parameter arrays (deterministic per tree position)."""
+    leaves, treedef = _flatten(specs)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            arrs.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            arrs.append(jnp.ones(s.shape, dtype))
+        else:
+            scale = s.scale if s.scale is not None else 0.02
+            arrs.append(jax.random.normal(k, s.shape, jnp.float32).astype(dtype) * scale)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — the dry-run stand-in (no allocation)."""
+    leaves, treedef = _flatten(specs)
+    return jax.tree.unflatten(
+        treedef, [jax.ShapeDtypeStruct(s.shape, dtype) for s in leaves]
+    )
+
+
+def axes_tree(specs):
+    """Tree of logical-axis tuples, same structure as the param tree."""
+    leaves, treedef = _flatten(specs)
+    return jax.tree.unflatten(treedef, [s.axes for s in leaves])
+
+
+def stack(specs, n: int):
+    """Prepend a scanned "layers" dimension to every spec in the subtree."""
+    leaves, treedef = _flatten(specs)
+    return jax.tree.unflatten(
+        treedef,
+        [ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale) for s in leaves],
+    )
+
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", None), *, bias: bool = False, bias_axes=None):
+    """A linear layer spec with fan-in init."""
+    out = {"w": ParamSpec((d_in, d_out), axes, "normal", 1.0 / math.sqrt(d_in))}
+    if bias:
+        out["b"] = ParamSpec((d_out,), bias_axes if bias_axes is not None else (axes[-1],), "zeros")
+    return out
+
+
+def count_params(specs) -> int:
+    leaves, _ = _flatten(specs)
+    return sum(int(math.prod(s.shape)) for s in leaves)

@@ -1,0 +1,12 @@
+"""Model construction from ArchConfig."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import DecoderLM, EncDecLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

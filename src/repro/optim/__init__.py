@@ -1,0 +1,14 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_state_axes
+from repro.optim.schedules import warmup_cosine
+from repro.optim.grad_utils import clip_by_global_norm, compress_tree, global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_axes",
+    "warmup_cosine",
+    "clip_by_global_norm",
+    "compress_tree",
+    "global_norm",
+]

@@ -1,0 +1,32 @@
+"""Gradient utilities: global-norm clipping, cross-pod gradient compression.
+
+Compression: the cross-pod (DCN) all-reduce is the slowest collective in a
+multi-pod job.  ``compress_tree`` casts the accumulated gradients to bf16
+*before* they cross the pod axis (halving DCN bytes) and back to f32 after —
+the classic 16-bit gradient-compression trick.  In the pjit data flow this is
+expressed by accumulating microbatch grads in bf16 and upcasting at the
+optimizer boundary; the §Perf log quantifies the collective-byte reduction
+from the compiled HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm
+
+
+def compress_tree(tree, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda l: l.astype(dtype) if jnp.issubdtype(l.dtype, jnp.floating) else l, tree
+    )

@@ -1,0 +1,13 @@
+"""Learning-rate schedules (return a multiplier on the base lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000, min_frac: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum((s + 1.0) / max(warmup, 1), 1.0)  # step 0 trains too
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    RULE_SETS,
+    logical_constraint,
+    use_rules,
+    spec_for,
+    sharding_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "RULE_SETS",
+    "logical_constraint",
+    "use_rules",
+    "spec_for",
+    "sharding_for",
+    "tree_shardings",
+]

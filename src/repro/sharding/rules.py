@@ -1,0 +1,192 @@
+"""Logical-axis -> mesh-axis sharding rule engine (MaxText-style).
+
+Every parameter and activation in the models carries *logical* axis names
+("embed", "heads", "batch", "cache_seq", ...).  A rule set maps each logical
+axis to an ordered tuple of candidate mesh axes; the mapping is
+*divisibility-aware*: the longest prefix of candidate mesh axes whose size
+product divides the dimension is used, otherwise the dim is replicated.
+This is what lets one rule table serve 24-head and 32-head models, 51865-
+and 262144-token vocabularies, on 16- or 512-chip meshes, without per-arch
+special cases.
+
+Rule sets per workload kind (see DESIGN.md §6):
+
+* train   — batch over (pod, data); FSDP: "embed" params over data; TP:
+            heads/mlp/vocab/experts over model.
+* prefill — inference: weights TP only (no FSDP gathers on the latency
+            path), batch over (pod, data).
+* decode  — like prefill; the KV cache's sequence axis is context-parallel
+            over "model" when kv-heads don't divide (GSPMD turns the
+            attention reduction into an all-reduce over partial softmax
+            stats).
+* long    — batch=1 long-context decode: cache sequence over (data, model),
+            weights TP.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+RULE_SETS: dict[str, dict[str, tuple[str, ...]]] = {
+    "train": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": ("data",),          # FSDP / ZeRO-3 on the intra-pod axis
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+        "layers": (),
+        "state": (),
+        "conv": (),
+        "cache_seq": (),
+        "act_embed": (),             # activations' d_model stays unsharded
+        "cap": (),
+    },
+    "prefill": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+        "layers": (),
+        "state": (),
+        "conv": (),
+        "cache_seq": (),
+        "act_embed": (),
+        "cap": (),
+    },
+    "decode": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+        "layers": (),
+        "state": (),
+        "conv": (),
+        "cache_seq": ("model",),     # context-parallel KV cache
+        "act_embed": (),
+        "cap": (),
+    },
+    # §Perf hillclimb variant: context-parallel prefill.  Activations are
+    # sharded on SEQUENCE over the model axis (MLP/norms turn collective-free)
+    # and weights on the CONTRACTING d_model dim (so each matmul psums its
+    # output — per-device output bytes are 1/model_parallelism of the TP
+    # activation all-reduce).  Attention all-gathers K/V, which is cheap for
+    # GQA archs (kv << heads).  See EXPERIMENTS §Perf iteration A.
+    "prefill_cp": {
+        "batch": ("pod", "data"),
+        "seq": ("model",),
+        "embed": ("model",),
+        "heads": (),
+        "kv": (),
+        "mlp": (),
+        "vocab": (),
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+        "layers": (),
+        "state": (),
+        "conv": (),
+        "cache_seq": ("model",),
+        "act_embed": (),
+        "cap": (),
+    },
+    "long": {
+        "batch": (),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+        "layers": (),
+        "state": (),
+        "conv": (),
+        "cache_seq": ("data", "model"),  # batch=1: all parallelism into the cache
+        "act_embed": (),
+        "cap": (),
+    },
+}
+
+
+def spec_for(logical_axes, dims, rules: dict, mesh: Mesh) -> P:
+    """PartitionSpec for one array: per dim, take the longest prefix of the
+    rule's mesh axes whose total size divides the dim (and is present in the
+    mesh); otherwise replicate that dim."""
+    entries = []
+    used = set()
+    for ax, dim in zip(logical_axes, dims):
+        cands = rules.get(ax, ()) if ax is not None else ()
+        chosen = []
+        prod = 1
+        for m in cands:
+            if m not in mesh.shape or m in used:
+                continue
+            size = mesh.shape[m]
+            if dim % (prod * size) == 0:
+                chosen.append(m)
+                prod *= size
+            else:
+                break
+        for m in chosen:
+            used.add(m)
+        entries.append(tuple(chosen) if len(chosen) > 1 else (chosen[0] if chosen else None))
+    return P(*entries)
+
+
+def sharding_for(logical_axes, dims, rules, mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical_axes, dims, rules, mesh))
+
+
+def tree_shardings(axes_tree, shape_tree, rules, mesh):
+    """NamedSharding tree for a (axes, arrays) pair of matching trees.
+    Logical-axis leaves are tuples, so flatten relative to the array tree."""
+    leaves, treedef = jax.tree.flatten(shape_tree)
+    axes_leaves = treedef.flatten_up_to(axes_tree)
+    return treedef.unflatten(
+        [sharding_for(ax, a.shape, rules, mesh) for ax, a in zip(axes_leaves, leaves)]
+    )
+
+
+# ------------------------------------------------------- activation context
+# Activation sharding constraints are injected via an ambient context so the
+# model code stays mesh-agnostic (identity when no context is active — e.g.
+# smoke tests on one device).
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def logical_constraint(x, logical_axes):
+    """with_sharding_constraint against the ambient rule set (no-op outside)."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(logical_axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,19 @@
+from repro.train.steps import (
+    cross_entropy,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    pad_caches,
+)
+from repro.train.loop import InjectedFailure, LoopConfig, train_loop
+
+__all__ = [
+    "cross_entropy",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+    "pad_caches",
+    "InjectedFailure",
+    "LoopConfig",
+    "train_loop",
+]

@@ -1,0 +1,105 @@
+"""Fault-tolerant training loop.
+
+Covers the scale-out failure modes the assignment requires, in a form
+testable on one host:
+  * periodic atomic checkpointing + restart-from-latest on failure;
+  * bounded retries (a persistently failing step aborts loudly, it doesn't
+    spin);
+  * straggler watchdog — a step slower than ``straggler_factor`` x the
+    rolling median is logged and counted (at fleet scale this signal drives
+    re-slicing / hot-spares; here it is surfaced and unit-tested);
+  * deterministic data by (step, host) so restarts and elastic resizes
+    replay the exact stream (see data/synthetic.py).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by test failure injectors to simulate node loss."""
+
+
+@dataclass
+class LoopConfig:
+    num_steps: int
+    ckpt_every: int = 50
+    max_retries: int = 3
+    straggler_factor: float = 3.0
+    log_every: int = 10
+
+
+@dataclass
+class LoopEvents:
+    restarts: int = 0
+    stragglers: int = 0
+    saved_steps: list = field(default_factory=list)
+
+
+def train_loop(
+    step_fn,
+    params,
+    opt_state,
+    batch_fn,
+    ckpt,
+    loop_cfg: LoopConfig,
+    *,
+    start_step: int = 0,
+    failure_injector=None,
+    log=print,
+):
+    """Run ``loop_cfg.num_steps`` steps with checkpoint/restart semantics.
+
+    batch_fn(step) -> batch dict.  Returns (params, opt_state, events).
+    """
+    events = LoopEvents()
+    times: deque = deque(maxlen=32)
+    retries = 0
+    step = start_step
+    metrics = {}
+
+    while step < loop_cfg.num_steps:
+        batch = batch_fn(step)
+        t0 = time.perf_counter()
+        try:
+            if failure_injector is not None:
+                failure_injector(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch, step)
+            jax.block_until_ready(metrics)
+        except InjectedFailure as e:
+            retries += 1
+            events.restarts += 1
+            if retries > loop_cfg.max_retries:
+                raise RuntimeError(f"step {step}: exceeded max retries") from e
+            latest = ckpt.latest_step()
+            log(f"[loop] failure at step {step} ({e}); restoring ckpt step {latest}")
+            if latest is not None:
+                state, restored = ckpt.restore({"params": params, "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                step = restored + 1
+            else:
+                step = start_step
+            continue
+        retries = 0
+        dt = time.perf_counter() - t0
+        if len(times) >= 5:
+            med = statistics.median(times)
+            if dt > loop_cfg.straggler_factor * med:
+                events.stragglers += 1
+                log(f"[loop] straggler: step {step} took {dt:.3f}s (median {med:.3f}s)")
+        times.append(dt)
+        if step % loop_cfg.ckpt_every == 0:
+            ckpt.save(step, {"params": params, "opt": opt_state})
+            events.saved_steps.append(step)
+        if step % loop_cfg.log_every == 0:
+            loss = float(np.asarray(metrics.get("loss", np.nan)))
+            log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        step += 1
+    return params, opt_state, events

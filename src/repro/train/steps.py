@@ -1,0 +1,157 @@
+"""Step functions: train (grad-accum + AdamW), prefill, decode.
+
+These are the functions the multi-pod dry-run lowers; sharding enters only
+through (a) in/out shardings applied by the caller's jit and (b) the ambient
+logical-axis rule context (activation constraints).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    compress_tree,
+    warmup_cosine,
+)
+from repro.sharding.rules import use_rules
+
+
+def cross_entropy(logits, labels):
+    """Mean next-token CE.  logits (B, S, V) f32, labels (B, S) int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+_MICRO_BATCH_AXIS = {"mrope_positions": 1}  # (3, B, S) — batch on axis 1
+
+
+def _split_micro(batch, accum: int):
+    def one(key, v):
+        ax = _MICRO_BATCH_AXIS.get(key, 0)
+        shape = v.shape
+        new = shape[:ax] + (accum, shape[ax] // accum) + shape[ax + 1 :]
+        return jnp.moveaxis(v.reshape(new), ax, 0)
+
+    return {k: one(k, v) for k, v in batch.items()}
+
+
+def make_loss_fn(model, cfg, *, remat: bool = True, lb_coef: float = 1e-2, z_coef: float = 1e-3, unroll: bool = False):
+    def loss_fn(params, micro):
+        kw = {}
+        if cfg.family == "audio":
+            kw["frames"] = micro["frames"]
+        h, _, aux = model.apply(params, micro["tokens"], mode="train", extra=micro, remat=remat, unroll=unroll, **kw)
+        logits = model.logits(params, h)
+        ce = cross_entropy(logits, micro["labels"])
+        loss = ce + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+        return loss, {"ce": ce, **aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    cfg,
+    shape,
+    *,
+    opt: AdamWConfig = AdamWConfig(),
+    mesh=None,
+    rules=None,
+    remat: bool = True,
+    compress_grads: bool = False,
+    unroll: bool = False,
+    schedule=functools.partial(warmup_cosine, warmup=100, total=10_000),
+):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    Gradient accumulation over ``shape.accum_steps`` microbatches via scan;
+    optional bf16 gradient compression during accumulation (halves the bytes
+    the cross-pod all-reduce moves — see optim/grad_utils.py).
+    """
+    accum = max(shape.accum_steps, 1)
+    loss_fn = make_loss_fn(model, cfg, remat=remat, unroll=unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        ctx = use_rules(mesh, rules) if mesh is not None else contextlib.nullcontext()
+        with ctx:
+            micro = _split_micro(batch, accum)
+            acc_dtype = jnp.bfloat16 if compress_grads else jnp.float32
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g = compress_tree(g, acc_dtype)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (gacc, lacc + loss), None
+
+            gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (gacc, loss_sum), _ = jax.lax.scan(body, (gacc0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / accum, gacc)
+            grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+            lr_scale = schedule(step)
+            params, opt_state = adamw_update(grads, opt_state, params, opt, lr_scale)
+            metrics = {
+                "loss": loss_sum / accum,
+                "grad_norm": gnorm,
+                "lr": opt.lr * lr_scale,
+            }
+            return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cfg, *, mesh=None, rules=None, unroll: bool = False):
+    """prefill_step(params, batch) -> (last_logits (B, V), caches)."""
+
+    def prefill_step(params, batch):
+        ctx = use_rules(mesh, rules) if mesh is not None else contextlib.nullcontext()
+        with ctx:
+            kw = {}
+            if cfg.family == "audio":
+                kw["frames"] = batch["frames"]
+            h, caches, _ = model.apply(params, batch["tokens"], mode="prefill", extra=batch, unroll=unroll, **kw)
+            logits = model.logits(params, h[:, -1:, :])[:, 0]
+            return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(model, cfg, *, mesh=None, rules=None, unroll: bool = False):
+    """serve_step(params, caches, tokens (B,1), pos) ->
+    (next_token (B,1), logits (B,V), new_caches)."""
+
+    def serve_step(params, caches, tokens, pos):
+        ctx = use_rules(mesh, rules) if mesh is not None else contextlib.nullcontext()
+        with ctx:
+            h, new_caches, _ = model.apply(params, tokens, mode="decode", caches=caches, pos=pos, unroll=unroll)
+            logits = model.logits(params, h)[:, 0]
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return next_token, logits, new_caches
+
+    return serve_step
+
+
+def pad_caches(caches, target_seq: int):
+    """Grow prefill caches to decode capacity along the cache_seq axis.
+    KV leaves are (G, B, S, kv, hd) (axis 2); SSM/conv/cross leaves pass
+    through untouched."""
+
+    def pad(path, a):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if names and names[-1] in ("k", "v") and "cross" not in names:
+            w = [(0, 0)] * a.ndim
+            w[2] = (0, target_seq - a.shape[2])
+            return jnp.pad(a, w)
+        return a
+
+    return jax.tree_util.tree_map_with_path(pad, caches)

@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+
+def make_points(m, n, seed=0, clustered=True, dtype=np.float32):
+    """Test point sets. Clustered data exercises the full alpha range
+    (uniform-random data saturates R(S0) > R_max => alpha == a5)."""
+    rng = np.random.default_rng(seed)
+    if clustered:
+        nc = max(2, m // 64)
+        centers = rng.random((nc, 2))
+        pts = centers[rng.integers(0, nc, m)] + rng.normal(0, 0.02, (m, 2))
+        pts = np.clip(pts, 0.0, 1.0)
+    else:
+        pts = rng.random((m, 2))
+    dx, dy = pts[:, 0].astype(dtype), pts[:, 1].astype(dtype)
+    dz = (np.sin(6 * pts[:, 0]) * np.cos(6 * pts[:, 1]) + 2.0).astype(dtype)
+    qx = rng.random(n).astype(dtype)
+    qy = rng.random(n).astype(dtype)
+    return dx, dy, dz, qx, qy
+
+
+@pytest.fixture
+def points_small():
+    return make_points(512, 200, seed=3)

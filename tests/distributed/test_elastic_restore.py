@@ -1,0 +1,50 @@
+"""Mesh-elastic checkpoint restore: a checkpoint saved under one mesh
+restores onto a DIFFERENT mesh/sharding (the restart-after-resize path).
+Runs on 8 simulated devices in a subprocess."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import Checkpointer
+
+tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+        "b": jnp.arange(16, dtype=jnp.float32)}
+
+# save while sharded over an 8-way mesh
+mesh8 = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+sh8 = {"w": NamedSharding(mesh8, P("data", None)), "b": NamedSharding(mesh8, P("data"))}
+sharded = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, sh8)
+d = tempfile.mkdtemp()
+ck = Checkpointer(d)
+ck.save(7, sharded)
+
+# restore onto a 2x2 mesh (simulated shrink from 8 to 4 chips)
+mesh4 = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+sh4 = {"w": NamedSharding(mesh4, P("data", "model")), "b": NamedSharding(mesh4, P("model"))}
+restored, step = ck.restore(tree, shardings=sh4)
+assert step == 7
+for k in tree:
+    np.testing.assert_array_equal(np.asarray(restored[k]), np.asarray(tree[k]))
+    assert restored[k].sharding == sh4[k], (k, restored[k].sharding)
+print("OK elastic-restore")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), "..", ".."), timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK elastic-restore" in r.stdout

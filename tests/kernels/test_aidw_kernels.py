@@ -1,0 +1,109 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracle (interpret mode).
+
+Sweeps shapes (aligned + ragged), block sizes, k, layouts and impls — every
+Pallas kernel in repro.kernels must match ref.py within f32 tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.aidw import AIDWParams
+from repro.kernels import aidw, idw
+from repro.kernels.ref import aidw_ref, idw_ref
+from conftest import make_points
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def _check(impl, layout, m, n, k=10, block_q=64, block_d=128, seed=0):
+    dx, dy, dz, qx, qy = make_points(m, n, seed=seed)
+    p = AIDWParams(k=k, area=1.0)
+    z_ref, a_ref = aidw_ref(dx, dy, dz, qx, qy, p, 1.0)
+    z, a = aidw(
+        dx, dy, dz, qx, qy,
+        params=p, area=1.0, impl=impl, layout=layout, block_q=block_q, block_d=block_d,
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=RTOL, atol=ATOL)
+
+
+ALL_VARIANTS = [
+    ("naive", "soa"),
+    ("naive", "aoas"),
+    ("tiled", "soa"),
+    ("tiled", "aoas"),
+    ("fused", "soa"),
+]
+
+
+@pytest.mark.parametrize("impl,layout", ALL_VARIANTS)
+@pytest.mark.parametrize("m,n", [(512, 256), (500, 203), (130, 77), (1024, 64)])
+def test_shape_sweep(impl, layout, m, n):
+    """Aligned and ragged (padding-path) shapes for every kernel variant."""
+    _check(impl, layout, m, n, seed=m + n)
+
+
+@pytest.mark.parametrize("impl,layout", ALL_VARIANTS)
+@pytest.mark.parametrize("k", [1, 4, 10, 16])
+def test_k_sweep(impl, layout, k):
+    _check(impl, layout, 300, 100, k=k, seed=k)
+
+
+@pytest.mark.parametrize("impl,layout", [("tiled", "soa"), ("tiled", "aoas"), ("fused", "soa")])
+@pytest.mark.parametrize("block_q,block_d", [(32, 64), (64, 256), (128, 128)])
+def test_block_sweep(impl, layout, block_q, block_d):
+    _check(impl, layout, 700, 300, block_q=block_q, block_d=block_d, seed=block_q)
+
+
+@pytest.mark.parametrize("impl,layout", ALL_VARIANTS)
+def test_exact_hits(impl, layout):
+    dx, dy, dz, _, _ = make_points(256, 1, seed=9)
+    z, _ = aidw(
+        dx, dy, dz, dx[:64], dy[:64],
+        params=AIDWParams(k=8, area=1.0), area=1.0, impl=impl, layout=layout,
+        block_q=32, block_d=64,
+    )
+    np.testing.assert_allclose(np.asarray(z), dz[:64], atol=1e-6)
+
+
+@pytest.mark.parametrize("impl,layout", ALL_VARIANTS)
+def test_alpha_levels_flat_reduces_to_idw(impl, layout):
+    dx, dy, dz, qx, qy = make_points(300, 120, seed=21)
+    p = AIDWParams(k=10, alpha_levels=(3.0,) * 5, area=1.0)
+    z, a = aidw(dx, dy, dz, qx, qy, params=p, area=1.0, impl=impl, layout=layout,
+                block_q=64, block_d=128)
+    np.testing.assert_allclose(np.asarray(a), 3.0, atol=1e-6)
+    z_idw = idw_ref(dx, dy, dz, qx, qy, 3.0)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_idw), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m,n", [(512, 256), (333, 130)])
+@pytest.mark.parametrize("alpha", [1.0, 2.0, 3.5])
+def test_idw_kernel(m, n, alpha):
+    dx, dy, dz, qx, qy = make_points(m, n, seed=int(alpha * 10))
+    z_ref = idw_ref(dx, dy, dz, qx, qy, alpha)
+    z = idw(dx, dy, dz, qx, qy, alpha=alpha, block_q=64, block_d=128)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=RTOL, atol=ATOL)
+
+
+def test_layouts_agree():
+    """SoA and AoaS must be bit-identical in math (only memory traffic differs)."""
+    dx, dy, dz, qx, qy = make_points(512, 200, seed=30)
+    p = AIDWParams(k=10, area=1.0)
+    z1, a1 = aidw(dx, dy, dz, qx, qy, params=p, area=1.0, impl="tiled", layout="soa",
+                  block_q=64, block_d=128)
+    z2, a2 = aidw(dx, dy, dz, qx, qy, params=p, area=1.0, impl="tiled", layout="aoas",
+                  block_q=64, block_d=128)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-6)
+
+
+def test_m_smaller_than_block():
+    _check("tiled", "soa", 50, 40, k=10, block_q=64, block_d=128, seed=31)
+
+
+def test_rejects_m_below_k():
+    dx, dy, dz, qx, qy = make_points(8, 4, seed=32)
+    with pytest.raises(ValueError):
+        aidw(dx, dy, dz, qx, qy, params=AIDWParams(k=10, area=1.0), area=1.0)

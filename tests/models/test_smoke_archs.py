@@ -1,0 +1,174 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a REDUCED same-family config and runs one forward + one
+train step on CPU, asserting output shapes and finiteness.  The FULL
+configs are exercised only via the dry-run (abstract, no allocation)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ShapeConfig, smoke
+from repro.data.synthetic import batch_for_arch
+from repro.models import build_model
+from repro.models import params as pm
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import make_train_step, make_prefill_step, make_serve_step, pad_caches
+
+B, S = 2, 32
+SMOKE_SHAPE = ShapeConfig("smoke", "train", S, B, accum_steps=2)
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    key = jax.random.PRNGKey(0)
+    for name, arch in ARCHS.items():
+        cfg = dataclasses.replace(smoke(arch), moe_capacity_factor=8.0)
+        model = build_model(cfg)
+        params = pm.materialize(model.spec(), key)
+        out[name] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_forward_shapes_finite(built, name):
+    cfg, model, params = built[name]
+    batch = batch_for_arch(cfg, SMOKE_SHAPE, 0)
+    kw = {"frames": batch["frames"]} if cfg.family == "audio" else {}
+    h, caches, aux = model.apply(params, batch["tokens"], mode="train", extra=batch, **kw)
+    assert h.shape == (B, S, cfg.d_model)
+    logits = model.logits(params, h)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{name}: non-finite logits"
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_one_train_step(built, name):
+    cfg, model, params = built[name]
+    step_fn = make_train_step(model, cfg, SMOKE_SHAPE, opt=AdamWConfig(lr=1e-3), remat=True)
+    opt_state = adamw_init(params)
+    batch = batch_for_arch(cfg, SMOKE_SHAPE, 0)
+    new_params, new_opt, metrics = jax.jit(step_fn)(params, opt_state, batch, jnp.int32(0))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0, f"{name}: loss={loss}"
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params)
+    assert max(jax.tree.leaves(d)) > 0, f"{name}: no parameter update"
+    assert int(new_opt["step"]) == 1
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_loss_decreases_over_steps(built, name):
+    """A few steps on a REPEATED batch must reduce the loss (end-to-end
+    learning sanity per arch)."""
+    cfg, model, params = built[name]
+    step_fn = jax.jit(
+        make_train_step(
+            model, cfg, SMOKE_SHAPE, opt=AdamWConfig(lr=3e-3, weight_decay=0.0), remat=False,
+            schedule=lambda step: 1.0,
+        )
+    )
+    opt_state = adamw_init(params)
+    batch = batch_for_arch(cfg, SMOKE_SHAPE, 0)
+    losses = []
+    p = params
+    for i in range(8):
+        p, opt_state, metrics = step_fn(p, opt_state, batch, jnp.int32(i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], f"{name}: {losses}"
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_prefill_decode_matches_full_forward(built, name):
+    """Serving correctness: prefill T tokens then decode token T == full
+    forward on T+1 tokens (MoE at dropless capacity; SSM tol covers bf16
+    chunked-vs-step drift)."""
+    cfg, model, params = built[name]
+    T, CAP = 24, 32
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size)
+    extra, kw = {}, {}
+    if cfg.family == "audio":
+        kw["frames"] = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extra["visual_embeds"] = jax.random.normal(key, (B, cfg.n_vis_tokens, cfg.d_model)) * 0.1
+
+    h_full, _, _ = model.apply(params, tokens, mode="train", extra=extra, **kw)
+    logits_full = model.logits(params, h_full)[:, -1]
+
+    h_pre, caches, _ = model.apply(params, tokens[:, :T], mode="prefill", extra=extra, **kw)
+    caches = pad_caches(caches, CAP)
+    h_dec, new_caches, _ = model.apply(
+        params, tokens[:, T : T + 1], mode="decode", caches=caches, pos=jnp.int32(T), extra=extra
+    )
+    logits_dec = model.logits(params, h_dec)[:, -1]
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-6
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec))) / scale
+    tol = 0.05 if cfg.family in ("ssm", "hybrid") else 1e-3
+    assert err < tol, f"{name}: rel err {err}"
+    assert new_caches is not None
+
+
+@pytest.mark.parametrize("name", ["minitron-4b", "mamba2-130m", "mixtral-8x7b", "whisper-medium"])
+def test_serve_step_greedy_chain(built, name):
+    """Three chained serve steps run and produce in-vocab tokens."""
+    cfg, model, params = built[name]
+    T, CAP = 8, 16
+    key = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    kw = {"frames": jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)} if cfg.family == "audio" else {}
+    prefill = make_prefill_step(model, cfg)
+    serve = jax.jit(make_serve_step(model, cfg))
+    batch = {"tokens": tokens, **kw}
+    logits, caches = prefill(params, batch)
+    caches = pad_caches(caches, CAP)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for i in range(3):
+        tok, logits, caches = serve(params, caches, tok, jnp.int32(T + i))
+        assert tok.shape == (B, 1)
+        assert int(tok.max()) < cfg.vocab_size and int(tok.min()) >= 0
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned dimensions."""
+    expect = {
+        "whisper-medium": dict(d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=51865, n_layers=24),
+        "minitron-4b": dict(d_model=3072, n_heads=24, n_kv_heads=8, d_ff=9216, vocab_size=256000, n_layers=32),
+        "stablelm-12b": dict(d_model=5120, n_heads=32, n_kv_heads=8, d_ff=13824, vocab_size=100352, n_layers=40),
+        "gemma3-27b": dict(d_model=5376, n_heads=32, n_kv_heads=16, d_ff=21504, vocab_size=262144, n_layers=62),
+        "qwen1.5-32b": dict(d_model=5120, n_heads=40, n_kv_heads=40, d_ff=27392, vocab_size=152064, n_layers=64),
+        "mamba2-130m": dict(d_model=768, vocab_size=50280, n_layers=24, ssm_state=128),
+        "mixtral-8x7b": dict(d_model=4096, n_heads=32, n_kv_heads=8, vocab_size=32000, n_layers=32, n_experts=8, moe_top_k=2, d_ff_expert=14336),
+        "qwen3-moe-30b-a3b": dict(d_model=2048, n_heads=32, n_kv_heads=4, vocab_size=151936, n_layers=48, n_experts=128, moe_top_k=8, d_ff_expert=768),
+        "qwen2-vl-72b": dict(d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568, vocab_size=152064, n_layers=80),
+        "zamba2-7b": dict(d_model=3584, n_heads=32, n_kv_heads=32, d_ff=14336, vocab_size=32000, n_layers=81, ssm_state=64),
+    }
+    for name, want in expect.items():
+        cfg = ARCHS[name]
+        for k, v in want.items():
+            assert getattr(cfg, k) == v, f"{name}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_param_counts_in_band():
+    """Total parameter counts sit near the advertised sizes."""
+    bands = {
+        "whisper-medium": (0.6e9, 1.0e9),
+        "minitron-4b": (3.5e9, 5.2e9),
+        "stablelm-12b": (10e9, 14e9),
+        "gemma3-27b": (24e9, 30e9),
+        "qwen1.5-32b": (30e9, 36e9),
+        "mamba2-130m": (0.10e9, 0.16e9),
+        "mixtral-8x7b": (44e9, 49e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "qwen2-vl-72b": (68e9, 76e9),
+        "zamba2-7b": (6e9, 9e9),
+    }
+    for name, (lo, hi) in bands.items():
+        model = build_model(ARCHS[name])
+        n = pm.count_params(model.spec())
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

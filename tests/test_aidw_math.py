@@ -1,0 +1,226 @@
+"""Unit + property tests for the AIDW mathematics (paper §2, Eq. 2-6)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AIDWParams,
+    aidw_reference,
+    alpha_from_mu,
+    fuzzy_membership,
+    expected_nn_distance,
+    idw_reference,
+    paper_insertion_knn,
+    running_k_best,
+)
+from conftest import make_points
+
+HSET = settings(deadline=None, max_examples=25)
+
+
+class TestAlphaMap:
+    def test_knot_values(self):
+        """Eq. 6 passes exactly through (0.1,a1),(0.3,a2),(0.5,a3),(0.7,a4),(0.9,a5)."""
+        levels = (0.5, 1.0, 2.0, 3.0, 4.0)
+        mu = jnp.array([0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0])
+        a = alpha_from_mu(mu, levels)
+        np.testing.assert_allclose(a, [0.5, 0.5, 1.0, 2.0, 3.0, 4.0, 4.0], rtol=1e-6)
+
+    def test_matches_eq6_piecewise(self):
+        """Literal transcription of Eq. (6) (NOT the paper's CUDA listing,
+        which has the a1-for-a2 typo in the 0.3-0.5 branch)."""
+        a1, a2, a3, a4, a5 = 0.5, 1.0, 2.0, 3.0, 4.0
+
+        def eq6(u):
+            if u <= 0.1:
+                return a1
+            if u <= 0.3:
+                return a1 * (1 - 5 * (u - 0.1)) + 5 * a2 * (u - 0.1)
+            if u <= 0.5:
+                return 5 * a3 * (u - 0.3) + a2 * (1 - 5 * (u - 0.3))
+            if u <= 0.7:
+                return a3 * (1 - 5 * (u - 0.5)) + 5 * a4 * (u - 0.5)
+            if u <= 0.9:
+                return 5 * a5 * (u - 0.7) + a4 * (1 - 5 * (u - 0.7))
+            return a5
+
+        mu = np.linspace(0, 1, 201)
+        expected = np.array([eq6(u) for u in mu])
+        got = alpha_from_mu(jnp.asarray(mu, jnp.float32), (a1, a2, a3, a4, a5))
+        np.testing.assert_allclose(got, expected, rtol=1e-5, atol=1e-6)
+
+    @given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+    @HSET
+    def test_continuity_and_bounds(self, u, eps):
+        levels = (0.5, 1.0, 2.0, 3.0, 4.0)
+        a = float(alpha_from_mu(jnp.float32(u), levels))
+        assert min(levels) - 1e-5 <= a <= max(levels) + 1e-5
+        # piecewise-linear with max slope 5*(max gap); continuity via Lipschitz
+        u2 = min(1.0, u + eps * 1e-3)
+        a2 = float(alpha_from_mu(jnp.float32(u2), levels))
+        assert abs(a2 - a) <= 5.1 * max(np.diff(levels)) * (u2 - u) + 1e-5
+
+    def test_monotone_for_increasing_levels(self):
+        mu = jnp.linspace(0, 1, 101)
+        a = np.asarray(alpha_from_mu(mu, (0.5, 1.0, 2.0, 3.0, 4.0)))
+        assert np.all(np.diff(a) >= -1e-6)
+
+
+class TestFuzzyMembership:
+    def test_eq5_bounds_and_endpoints(self):
+        r = jnp.linspace(-1.0, 3.0, 101)
+        mu = np.asarray(fuzzy_membership(r, 0.0, 2.0))
+        assert np.all((mu >= 0) & (mu <= 1))
+        assert mu[r <= 0].max() == 0.0
+        assert mu[np.asarray(r) >= 2.0].min() == 1.0
+        # midpoint: R = 1 -> mu = 0.5 - 0.5*cos(pi/2) = 0.5
+        np.testing.assert_allclose(fuzzy_membership(jnp.float32(1.0), 0.0, 2.0), 0.5, atol=1e-6)
+
+    def test_expected_nn_distance(self):
+        # Eq. 2: unit square, m=400 -> 1/(2*sqrt(400)) = 0.025
+        assert abs(expected_nn_distance(400, 1.0) - 0.025) < 1e-12
+
+
+class TestKNN:
+    @given(st.integers(1, 16), st.integers(20, 200), st.integers(0, 2**31 - 1))
+    @HSET
+    def test_paper_insertion_matches_sort(self, k, m, seed):
+        rng = np.random.default_rng(seed)
+        d = rng.random(m).astype(np.float32)
+        got = paper_insertion_knn(d, k)
+        np.testing.assert_array_equal(got, np.sort(d)[:k])
+
+    @given(st.integers(1, 12), st.integers(1, 40), st.integers(0, 2**31 - 1))
+    @HSET
+    def test_running_k_best_matches_sort(self, k, t, seed):
+        rng = np.random.default_rng(seed)
+        rows = 7
+        best = jnp.full((rows, k), jnp.inf)
+        tiles = rng.random((3, rows, t)).astype(np.float32)
+        for tile in tiles:
+            best = running_k_best(best, jnp.asarray(tile))
+        allv = tiles.transpose(1, 0, 2).reshape(rows, -1)
+        expected = np.sort(allv, axis=1)[:, :k]
+        expected = np.concatenate(
+            [expected, np.full((rows, max(0, k - allv.shape[1])), np.inf, np.float32)], axis=1
+        )[:, :k]
+        np.testing.assert_allclose(np.asarray(best), expected, rtol=1e-6)
+
+    def test_running_k_best_duplicate_safe(self):
+        # ties must be extracted one occurrence at a time
+        best = jnp.full((1, 3), jnp.inf)
+        tile = jnp.array([[2.0, 1.0, 1.0, 1.0, 5.0]])
+        out = np.asarray(running_k_best(best, tile))
+        np.testing.assert_array_equal(out, [[1.0, 1.0, 1.0]])
+
+
+class TestAIDWProperties:
+    def test_convex_combination(self, points_small):
+        """z_hat is a weighted average => bounded by [min z, max z]."""
+        dx, dy, dz, qx, qy = points_small
+        z, _ = aidw_reference(dx, dy, dz, qx, qy, AIDWParams(area=1.0))
+        assert float(jnp.min(z)) >= dz.min() - 1e-5
+        assert float(jnp.max(z)) <= dz.max() + 1e-5
+
+    def test_exact_at_data_points(self, points_small):
+        dx, dy, dz, qx, qy = points_small
+        z, _ = aidw_reference(dx, dy, dz, dx[:32], dy[:32], AIDWParams(area=1.0))
+        np.testing.assert_allclose(np.asarray(z), dz[:32], atol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1))
+    @HSET
+    def test_permutation_invariance(self, seed):
+        dx, dy, dz, qx, qy = make_points(128, 40, seed=seed)
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(128)
+        p = AIDWParams(k=8, area=1.0)
+        z1, a1 = aidw_reference(dx, dy, dz, qx, qy, p)
+        z2, a2 = aidw_reference(dx[perm], dy[perm], dz[perm], qx, qy, p)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-6)
+
+    @given(st.floats(-5.0, 5.0), st.floats(-5.0, 5.0))
+    @HSET
+    def test_translation_invariance(self, tx, ty):
+        dx, dy, dz, qx, qy = make_points(128, 40, seed=11)
+        p = AIDWParams(k=8, area=1.0)
+        z1, a1 = aidw_reference(dx, dy, dz, qx, qy, p)
+        z2, a2 = aidw_reference(dx + tx, dy + ty, dz, qx + tx, qy + ty, p)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=2e-3, atol=2e-3)
+
+    def test_scale_invariance_with_area(self):
+        """Scaling coords by s and area by s^2 leaves R(S0), alpha, z unchanged."""
+        dx, dy, dz, qx, qy = make_points(128, 40, seed=12)
+        s = 7.5
+        p1 = AIDWParams(k=8, area=1.0)
+        p2 = AIDWParams(k=8, area=s * s)
+        z1, a1 = aidw_reference(dx, dy, dz, qx, qy, p1)
+        z2, a2 = aidw_reference(dx * s, dy * s, dz, qx * s, qy * s, p2)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-3, atol=1e-3)
+
+    def test_reduces_to_idw_with_flat_levels(self):
+        """With a1=..=a5=alpha, the adaptive map is constant => AIDW == IDW."""
+        dx, dy, dz, qx, qy = make_points(200, 64, seed=13)
+        p = AIDWParams(k=10, alpha_levels=(2.0,) * 5, area=1.0)
+        z_aidw, alpha = aidw_reference(dx, dy, dz, qx, qy, p)
+        z_idw = idw_reference(dx, dy, dz, qx, qy, 2.0)
+        np.testing.assert_allclose(np.asarray(alpha), 2.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(z_aidw), np.asarray(z_idw), rtol=1e-5, atol=1e-6)
+
+    def test_adaptive_beats_or_matches_idw_on_clustered_field(self):
+        """Sanity check of the paper's premise on a clustered sample of a
+        smooth field: AIDW's error is within a small factor of the best
+        constant-alpha IDW (it adapts locally rather than globally)."""
+        rng = np.random.default_rng(14)
+        f = lambda x, y: np.sin(4 * x) * np.cos(3 * y) + 0.5 * x
+        nc = 12
+        centers = rng.random((nc, 2))
+        pts = np.clip(centers[rng.integers(0, nc, 600)] + rng.normal(0, 0.05, (600, 2)), 0, 1)
+        dx, dy = pts[:, 0].astype(np.float32), pts[:, 1].astype(np.float32)
+        dz = f(dx, dy).astype(np.float32)
+        qx = rng.random(300).astype(np.float32)
+        qy = rng.random(300).astype(np.float32)
+        truth = f(qx, qy)
+        z_aidw, _ = aidw_reference(dx, dy, dz, qx, qy, AIDWParams(k=10, area=1.0))
+        errs = {
+            a: float(np.sqrt(np.mean((np.asarray(idw_reference(dx, dy, dz, qx, qy, a)) - truth) ** 2)))
+            for a in (1.0, 2.0, 3.0, 4.0)
+        }
+        err_aidw = float(np.sqrt(np.mean((np.asarray(z_aidw) - truth) ** 2)))
+        assert err_aidw <= 1.25 * min(errs.values()), (err_aidw, errs)
+
+
+def test_accumulation_error_hierarchy():
+    """EXPERIMENTS §Accuracy: serial f32 (the paper's per-thread kernel)
+    >> tiled f32 (this repo) >> Kahan-tiled f32, against an f64 truth."""
+    rng = np.random.default_rng(0)
+    m = 102400
+    d2 = (rng.random(m) ** 2 + 1e-6).astype(np.float64)
+    w64 = d2**-1.5
+    truth = w64.sum()
+    w32 = w64.astype(np.float32)
+
+    serial = np.float32(0)
+    for v in w32:
+        serial = np.float32(serial + v)
+    serial_err = abs(float(serial) - truth) / truth
+
+    tiled = np.float32(0)
+    for t in w32.reshape(-1, 1024):
+        tiled = np.float32(tiled + t.sum(dtype=np.float32))
+    tiled_err = abs(float(tiled) - truth) / truth
+
+    s = np.float32(0)
+    c = np.float32(0)
+    for t in w32.reshape(-1, 1024):
+        y = np.float32(t.sum(dtype=np.float32) - c)
+        tt = np.float32(s + y)
+        c = np.float32((tt - s) - y)
+        s = tt
+    kahan_err = abs(float(s) - truth) / truth
+
+    assert tiled_err < serial_err / 50, (tiled_err, serial_err)
+    assert kahan_err < tiled_err / 2, (kahan_err, tiled_err)

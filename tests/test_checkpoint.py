@@ -1,0 +1,66 @@
+"""Checkpointer: atomic roundtrip, integrity, keep-N GC, restore-into-target."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32)),
+                   "stack": {"k": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32))}},
+        "opt": {"m": jnp.zeros((4, 4)), "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(1)
+    ck.save(12, t)
+    restored, step = ck.restore(t)
+    assert step == 12
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), t, restored)
+
+
+def test_latest_and_keep(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = _tree(2)
+    for s in (1, 5, 9):
+        ck.save(s, t)
+    assert ck.latest_step() == 9
+    assert ck.all_steps() == [5, 9]  # keep=2 GC'd step 1
+
+
+def test_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(3)
+    path = ck.save(3, t)
+    # flip bytes in one array file
+    for name in os.listdir(path):
+        if name.endswith(".npy"):
+            a = np.load(os.path.join(path, name))
+            np.save(os.path.join(path, name), a + 1)
+            break
+    with pytest.raises(IOError):
+        ck.restore(t)
+
+
+def test_restore_missing_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(_tree())
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(4)
+    ck.save(1, t)
+    bad = jax.tree.map(lambda a: jnp.zeros((9, 9)) if a.ndim == 2 else a, t)
+    with pytest.raises(ValueError):
+        ck.restore(bad)

@@ -1,0 +1,41 @@
+"""Data pipeline: determinism, host-sharding consistency, elastic resize."""
+
+import numpy as np
+
+from repro.data import HostDataPipeline, SyntheticTokens
+
+
+def test_deterministic_across_calls():
+    ds = SyntheticTokens(vocab_size=100, global_batch=8, seq_len=16, seed=3)
+    a = ds.global_batch_at(5)
+    b = ds.global_batch_at(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = ds.global_batch_at(6)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    ds = SyntheticTokens(vocab_size=50, global_batch=4, seq_len=12)
+    b = ds.global_batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1]))
+
+
+def test_host_slices_tile_the_global_batch():
+    """4 hosts' slices concatenate to the global batch — and the stream is
+    identical under a different host count (elastic resize safety)."""
+    ds = SyntheticTokens(vocab_size=100, global_batch=8, seq_len=16, seed=1)
+    full = np.asarray(ds.global_batch_at(7)["tokens"])
+    got4 = np.concatenate([np.asarray(ds.host_batch_at(7, h, 4)["tokens"]) for h in range(4)])
+    got2 = np.concatenate([np.asarray(ds.host_batch_at(7, h, 2)["tokens"]) for h in range(2)])
+    np.testing.assert_array_equal(full, got4)
+    np.testing.assert_array_equal(full, got2)
+
+
+def test_pipeline_prefetch_order():
+    ds = SyntheticTokens(vocab_size=100, global_batch=4, seq_len=8)
+    pipe = HostDataPipeline(ds, host_id=0, num_hosts=1, prefetch=2).start(from_step=3)
+    try:
+        steps = [pipe.get()[0] for _ in range(4)]
+        assert steps == [3, 4, 5, 6]
+    finally:
+        pipe.stop()

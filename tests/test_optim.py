@@ -1,0 +1,71 @@
+"""Optimizer unit tests: AdamW against a literal numpy reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_tree,
+    global_norm,
+    warmup_cosine,
+)
+
+
+def np_adamw(params, grads, m, v, step, cfg):
+    out_p, out_m, out_v = {}, {}, {}
+    c1 = 1 - cfg.b1**step
+    c2 = 1 - cfg.b2**step
+    for k in params:
+        g = grads[k]
+        m[k] = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        v[k] = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        mh, vh = m[k] / c1, v[k] / c2
+        out_p[k] = params[k] - cfg.lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * params[k])
+    return out_p, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.01)
+    params = {"a": rng.normal(size=(4, 3)).astype(np.float32), "b": rng.normal(size=(7,)).astype(np.float32)}
+    jp = jax.tree.map(jnp.asarray, params)
+    state = adamw_init(jp)
+    npp = {k: v.copy() for k, v in params.items()}
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v_ = {k: np.zeros_like(v) for k, v in params.items()}
+    for step in range(1, 6):
+        grads = {"a": rng.normal(size=(4, 3)).astype(np.float32), "b": rng.normal(size=(7,)).astype(np.float32)}
+        jp, state = adamw_update(jax.tree.map(jnp.asarray, grads), state, jp, cfg)
+        npp, m, v_ = np_adamw(npp, grads, m, v_, step, cfg)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(jp[k]), npp[k], rtol=2e-5, atol=2e-6)
+    assert int(state["step"]) == 5
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5,)) * 4.0}
+    gn = float(global_norm(tree))
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - gn) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    # below threshold: untouched
+    same, _ = clip_by_global_norm(tree, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0, rtol=1e-6)
+
+
+def test_compress_tree_dtypes():
+    tree = {"a": jnp.ones((3,), jnp.float32), "i": jnp.ones((3,), jnp.int32)}
+    out = compress_tree(tree)
+    assert out["a"].dtype == jnp.bfloat16
+    assert out["i"].dtype == jnp.int32
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(jnp.int32(0), warmup=10, total=100)) > 0
+    assert abs(float(warmup_cosine(jnp.int32(9), warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(warmup_cosine(jnp.int32(99), warmup=10, total=100))
+    assert end < 0.2

@@ -1,0 +1,71 @@
+"""Sharding rule engine: divisibility fallback, axis-reuse guard, rule sets."""
+
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.rules import RULE_SETS, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape like jax Mesh (dict of axis sizes)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+M = FakeMesh({"pod": 2, "data": 16, "model": 16})
+SINGLE = FakeMesh({"data": 16, "model": 16})
+
+
+def test_divisible_dims_shard():
+    spec = spec_for(("embed", "mlp"), (5120, 13824), RULE_SETS["train"], M)
+    assert spec == P("data", "model")
+
+
+def test_non_divisible_replicates():
+    # 51865 (whisper vocab) is not divisible by 16 -> replicated
+    spec = spec_for(("vocab", "embed"), (51865, 1024), RULE_SETS["train"], M)
+    assert spec == P(None, "data")
+
+
+def test_batch_uses_pod_and_data():
+    spec = spec_for(("batch", "seq"), (256, 4096), RULE_SETS["train"], M)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_batch_partial_prefix_when_pod_missing():
+    spec = spec_for(("batch", "seq"), (256, 4096), RULE_SETS["train"], SINGLE)
+    assert spec == P("data", None)
+
+
+def test_batch_one_replicates():
+    spec = spec_for(("batch", "seq"), (1, 4096), RULE_SETS["train"], M)
+    assert spec == P(None, None)
+
+
+def test_axis_never_used_twice():
+    # both dims want "model"; the second must fall back to replication
+    spec = spec_for(("heads", "kv"), (4096, 1024), RULE_SETS["train"], M)
+    assert spec == P("model", None)
+
+
+def test_long_rules_context_parallel_cache():
+    spec = spec_for(("batch", "cache_seq", "kv", None), (1, 524288, 16, 128), RULE_SETS["long"], M)
+    assert spec == P(None, ("data", "model"), None, None)
+
+
+def test_decode_rules_cache_seq_on_model():
+    spec = spec_for(("batch", "cache_seq", "kv", None), (128, 32768, 8, 128), RULE_SETS["decode"], M)
+    assert spec == P(("pod", "data"), "model", None, None)
+
+
+def test_logical_constraint_noop_outside_context():
+    import jax.numpy as jnp
+
+    from repro.sharding.rules import logical_constraint
+
+    x = jnp.ones((4, 4))
+    y = logical_constraint(x, ("batch", "embed"))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
