@@ -15,6 +15,8 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
+import functools
+import json
 import os
 import subprocess
 import sys
@@ -29,10 +31,11 @@ from benchmarks.aidw_model import (
     modeled_tpu_seconds,
     naive_vmem_bytes,
 )
-from repro.core.aidw import AIDWParams, aidw_interpolate
+from repro.core.aidw import AIDWParams, aidw_interpolate, brute_r_obs
+from repro.core.grid import build_grid, grid_r_obs
 from repro.core.idw import idw_interpolate
 from repro.core.layouts import soa_to_aoas
-from repro.data.spatial import uniform_points
+from repro.data.spatial import clustered_points, uniform_points
 
 K = 1024
 PAPER_SIZES = {"10K": 10 * K, "50K": 50 * K, "100K": 100 * K, "500K": 500 * K, "1000K": 1000 * K}
@@ -168,6 +171,54 @@ def fig7_tiled_vs_naive(quick=False):
     _row("fig7", "paper_tiled_speedup", "1.3x", "paper: shared-memory tiling")
 
 
+def grid_phase1(quick=False, json_path=None):
+    """Tentpole sweep: grid-partitioned vs brute-force Phase 1 (r_obs) on
+    uniform and clustered data — the adaptive case the paper targets.  The
+    grid row times build_grid + the ring search, so the speedup is end-to-end
+    honest; JSON results land in benchmarks/results/grid_knn.json."""
+    k = 10
+    sizes = [20 * K] if quick else [20 * K, 100 * K]
+    records = []
+    for dist_name, gen in (("uniform", uniform_points), ("clustered", clustered_points)):
+        for m in sizes:
+            nq = max(m // 5, 1024)
+            dxn, dyn, _ = gen(m, seed=0)
+            qxn, qyn, _ = uniform_points(nq, seed=1)
+            dx, dy, qx, qy = map(jnp.asarray, (dxn, dyn, qxn, qyn))
+            # one warm+parity eval, one timed eval — the 100K brute baseline
+            # is minutes per eval, so no repeats
+            r_brute = jax.block_until_ready(brute_r_obs(dx, dy, qx, qy, k))
+            t_brute = time_fn(lambda: brute_r_obs(dx, dy, qx, qy, k), warmup=0, repeats=1)
+            grid = build_grid(dx, dy)
+            r_grid = jax.block_until_ready(grid_r_obs(grid, qx, qy, k))
+
+            def grid_pass():
+                g = build_grid(dx, dy)
+                return grid_r_obs(g, qx, qy, k)
+
+            t_grid = time_fn(grid_pass, warmup=0, repeats=1)
+            # parity guard: a benchmark of a wrong answer is worthless
+            err = float(jnp.max(jnp.abs(r_grid - r_brute)))
+            tag = f"{dist_name}_{m//K}K"
+            _row("grid", f"brute_phase1_{tag}", f"{t_brute*1e3:.1f}ms", f"m={m} nq={nq} k={k}")
+            _row("grid", f"grid_phase1_{tag}", f"{t_grid*1e3:.1f}ms",
+                 f"build+search, {grid.gx}x{grid.gy} cells cap={grid.cap}")
+            _row("grid", f"grid_speedup_{tag}", f"{t_brute/t_grid:.1f}x", f"max|dr_obs|={err:.2e}")
+            records.append({
+                "distribution": dist_name, "m": m, "nq": nq, "k": k,
+                "grid": f"{grid.gx}x{grid.gy}", "cap": grid.cap,
+                "brute_phase1_ms": round(t_brute * 1e3, 1),
+                "grid_phase1_ms": round(t_grid * 1e3, 1),
+                "speedup": round(t_brute / t_grid, 1),
+                "max_abs_r_obs_err": err,
+            })
+    if json_path:
+        os.makedirs(os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump({"backend": jax.default_backend(), "results": records}, f, indent=2)
+        _row("grid", "json", json_path)
+
+
 def lm_rooflines(quick=False):
     """Roofline summary from the dry-run artifacts (EXPERIMENTS §Roofline)."""
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -211,12 +262,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated table names")
     args = ap.parse_args()
+    grid_json = os.path.join(os.path.dirname(__file__), "results", "grid_knn.json")
     tables = {
         "table1": table1_execution_time,
         "fig4": fig4_speedups,
         "fig5": fig5_double_precision,
         "fig6": fig6_layouts,
         "fig7": fig7_tiled_vs_naive,
+        "grid": functools.partial(grid_phase1, json_path=grid_json),
         "lm": lm_rooflines,
     }
     only = set(args.only.split(",")) if args.only else None

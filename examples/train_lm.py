@@ -7,7 +7,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--arch mamba2-130m] [--steps 2
 """
 
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

@@ -14,6 +14,7 @@ from repro.core.aidw import (
     fuzzy_membership,
     expected_nn_distance,
 )
+from repro.core.grid import UniformGrid, build_grid, grid_knn, grid_r_obs
 from repro.core.idw import idw_reference, idw_interpolate
 from repro.core.knn import (
     k_smallest,
@@ -30,6 +31,10 @@ __all__ = [
     "alpha_from_mu",
     "fuzzy_membership",
     "expected_nn_distance",
+    "UniformGrid",
+    "build_grid",
+    "grid_knn",
+    "grid_r_obs",
     "idw_reference",
     "idw_interpolate",
     "k_smallest",

@@ -158,7 +158,6 @@ def aidw_reference(dx, dy, dz, qx, qy, params: AIDWParams = AIDWParams(), *, are
     return zhat, alpha
 
 
-@partial(jax.jit, static_argnames=("params", "area", "q_chunk", "d_chunk"))
 def aidw_interpolate(
     dx,
     dy,
@@ -170,6 +169,8 @@ def aidw_interpolate(
     area: float | None = None,
     q_chunk: int = 1024,
     d_chunk: int = 4096,
+    knn: str = "brute",
+    grid=None,
 ):
     """Production single-host AIDW: O(q_chunk * d_chunk) peak memory.
 
@@ -177,16 +178,85 @@ def aidw_interpolate(
     computed twice) with the data-point axis tiled — this is the pure-jnp
     twin of the *tiled* kernel and the building block of the distributed
     ring version.  Returns ``(z_hat, alpha)``.
+
+    ``knn="grid"`` replaces the Phase-1 brute-force k-best scan with the
+    uniform-grid ring search of ``repro.core.grid`` (near-O(k) per query);
+    Phase 2 (weights over ALL m points) is identical either way.  The grid
+    path is eager-only at the top level (``build_grid`` needs concrete
+    occupancy); pass a prebuilt ``grid=`` to amortise across query batches.
     """
+    if knn not in ("brute", "grid"):
+        raise ValueError(f"knn must be 'brute' or 'grid', got {knn!r}")
+    if knn == "brute" and grid is not None:
+        raise ValueError("grid= is only meaningful with knn='grid'")
     if area is None and params.area is None:
         raise ValueError("jit path requires a static area; pass area= or set params.area")
+    a = area if area is not None else params.area
+    if knn == "grid":
+        from repro.core.grid import build_grid, grid_r_obs
+
+        if grid is None:
+            grid = build_grid(dx, dy, dz)
+        r_obs = grid_r_obs(grid, qx, qy, params.k)
+    else:
+        r_obs = brute_r_obs(dx, dy, qx, qy, params.k, q_chunk=q_chunk, d_chunk=d_chunk)
+    alpha = adaptive_alpha(r_obs, dx.shape[0], a, params)
+    zhat = _interpolate_pass2(
+        dx, dy, dz, qx, qy, alpha, params, area=float(a), q_chunk=q_chunk, d_chunk=d_chunk
+    )
+    return zhat, alpha
+
+
+@partial(jax.jit, static_argnames=("k", "q_chunk", "d_chunk"))
+def brute_r_obs(dx, dy, qx, qy, k: int, *, q_chunk: int = 1024, d_chunk: int = 4096):
+    """Phase 1, brute force: chunked running-k-best scan over ALL m data
+    points -> mean k-nearest distance per query, shape ``(n,)``.
+
+    The single implementation behind ``aidw_interpolate(knn="brute")`` and
+    the benchmark baseline (``benchmarks/run.py``), and the pure-jnp twin of
+    the grid path's ``grid_r_obs``."""
+    n = qx.shape[0]
+    dtype = qx.dtype
+    big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
+    m_pad = (-dx.shape[0]) % d_chunk
+    d_tiles = jnp.concatenate([dx, jnp.full((m_pad,), big, dtype)]).reshape(-1, d_chunk)
+    dy_tiles = jnp.concatenate([dy, jnp.full((m_pad,), big, dtype)]).reshape(-1, d_chunk)
+    n_pad = (-n) % q_chunk
+    qxp = jnp.concatenate([qx, jnp.zeros((n_pad,), dtype)])
+    qyp = jnp.concatenate([qy, jnp.zeros((n_pad,), dtype)])
+
+    def per_q_chunk(q):
+        qcx, qcy = q
+
+        def knn_step(best, tile):
+            tx, ty = tile
+            return running_k_best(best, _sq_dists(qcx, qcy, tx, ty)), None
+
+        best0 = jnp.full((q_chunk, k), jnp.inf, dtype)
+        best, _ = jax.lax.scan(knn_step, best0, (d_tiles, dy_tiles))
+        return jnp.mean(jnp.sqrt(best), axis=1)
+
+    q_tiles = (qxp.reshape(-1, q_chunk), qyp.reshape(-1, q_chunk))
+    return jax.lax.map(per_q_chunk, q_tiles).reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("params", "area", "q_chunk", "d_chunk"))
+def _interpolate_pass2(
+    dx, dy, dz, qx, qy, alpha,
+    params: AIDWParams,
+    *,
+    area: float,
+    q_chunk: int = 1024,
+    d_chunk: int = 4096,
+):
+    """Phase 2 — the chunked weighted-average sweep with a precomputed
+    per-query ``alpha``.  Shared by both knn paths (``brute_r_obs`` and
+    ``grid_r_obs`` only differ in how Phase 1 finds the neighbours), so the
+    Phase-2 numerics are identical by construction."""
     m = dx.shape[0]
     n = qx.shape[0]
-    a = area if area is not None else params.area
     dtype = qx.dtype
 
-    # pad data axis to a multiple of d_chunk with +inf sentinels (zero weight,
-    # never enter the k-best set)
     m_pad = (-m) % d_chunk
     big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
     dxp = jnp.concatenate([dx, jnp.full((m_pad,), big, dtype)])
@@ -195,27 +265,15 @@ def aidw_interpolate(
     n_pad = (-n) % q_chunk
     qxp = jnp.concatenate([qx, jnp.zeros((n_pad,), dtype)])
     qyp = jnp.concatenate([qy, jnp.zeros((n_pad,), dtype)])
+    alphap = jnp.concatenate([alpha.astype(dtype), jnp.ones((n_pad,), dtype)])
 
     d_tiles = dxp.reshape(-1, d_chunk)
     dy_tiles = dyp.reshape(-1, d_chunk)
     dz_tiles = dzp.reshape(-1, d_chunk)
 
     def per_q_chunk(q):
-        qcx, qcy = q
+        qcx, qcy, alpha_half = q
 
-        # ---- pass 1: kNN over data tiles (running k-best merge) ----
-        def knn_step(best, tile):
-            tx, ty = tile
-            d2 = _sq_dists(qcx, qcy, tx, ty)
-            return running_k_best(best, d2), None
-
-        best0 = jnp.full((q_chunk, params.k), jnp.inf, dtype)
-        best, _ = jax.lax.scan(knn_step, best0, (d_tiles, dy_tiles))
-        r_obs = jnp.mean(jnp.sqrt(best), axis=1)
-        alpha = adaptive_alpha(r_obs, m, a, params)
-        alpha_half = alpha * 0.5
-
-        # ---- pass 2: weighted average over data tiles ----
         def w_step(carry, tile):
             sum_w, sum_wz, min_d2, hit_z = carry
             tx, ty, tz = tile
@@ -237,9 +295,12 @@ def aidw_interpolate(
         (sum_w, sum_wz, min_d2, hit_z), _ = jax.lax.scan(
             w_step, carry0, (d_tiles, dy_tiles, dz_tiles)
         )
-        zhat = jnp.where(min_d2 <= params.exact_hit_eps, hit_z, sum_wz / sum_w)
-        return zhat, alpha
+        return jnp.where(min_d2 <= params.exact_hit_eps, hit_z, sum_wz / sum_w)
 
-    q_tiles = (qxp.reshape(-1, q_chunk), qyp.reshape(-1, q_chunk))
-    zhat, alpha = jax.lax.map(per_q_chunk, q_tiles)
-    return zhat.reshape(-1)[:n], alpha.reshape(-1)[:n]
+    q_tiles = (
+        qxp.reshape(-1, q_chunk),
+        qyp.reshape(-1, q_chunk),
+        (alphap * 0.5).reshape(-1, q_chunk),
+    )
+    zhat = jax.lax.map(per_q_chunk, q_tiles)
+    return zhat.reshape(-1)[:n]

@@ -1,0 +1,349 @@
+"""Uniform-grid spatial partition for fast kNN — the Phase-1 accelerator.
+
+The paper's AIDW Phase 1 computes ``r_obs`` (mean distance to the k nearest
+data points) by brute-force scanning all m data points per query.  The
+follow-up work (arXiv:1601.05904, "Improving GPU-accelerated Adaptive IDW
+Interpolation Algorithm Using Fast kNN Search") replaces that scan with a
+uniform grid: bucket the data points into ``gx x gy`` cells, then search
+outward from the query's home cell in expanding Chebyshev rings until the
+running kth-best distance proves no unvisited cell can hold a closer point.
+
+Layout (DESIGN.md §4): points are sorted by cell id and scattered into a
+*padded* ``(n_cells + 1, cap)`` array (``cap`` = max cell occupancy).  Empty
+slots hold a large sentinel coordinate whose squared distance overflows to
++inf, so they can never enter a k-best set; row ``n_cells`` is an
+all-sentinel row used as the gather target for out-of-grid / masked cell
+ids — every gather is in-bounds and branch-free.  A ``(gy+1, gx+1)``
+integral image of the occupancy counts answers "how many points in the
+(2r+1)^2 block around cell C" in O(1), which powers both the empty-ring
+skip of :func:`grid_knn` and the occupancy-only :func:`safe_radius` bound
+used by the Pallas grid kernel.
+
+Ring-search invariant (the correctness contract, exercised by the property
+tests): for a query whose *clamped* home cell is C, every point in a cell
+at Chebyshev distance ``c`` from C lies at Euclidean distance
+``>= (c - 1) * min(cell_w, cell_h)`` from the query.  Hence once rings
+``0..r`` are merged, the search may stop as soon as
+``kth_best^2 <= (r * min(cell_w, cell_h))^2`` — all unvisited cells are at
+Chebyshev ``>= r + 1``.  The bound survives queries *outside* the grid:
+clamping the home cell only ever moves it toward the query along each axis,
+so per-axis gaps to other cells only grow.
+
+Everything below is pure jnp + lax (no Pallas) so it lowers identically
+under jit, eagerly, and in interpret-mode comparisons.  ``build_grid`` is
+the one eager-only entry point: the padded capacity is data-dependent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knn import running_k_best
+
+# Default mean points-per-cell the auto-resolution aims for.  ~16 keeps the
+# home 3x3 block at ~144 expected points — comfortably above the paper's
+# k=10 — while cells stay small enough that the stop bound fires on ring 1.
+DEFAULT_OCCUPANCY = 16.0
+
+# Cells per axis are clamped here: beyond this the integral image and the
+# per-ring bookkeeping start to dominate the win over brute force.
+MAX_CELLS_PER_AXIS = 512
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class UniformGrid:
+    """Padded uniform-grid bucketing of an attributed 2-D point set.
+
+    Attributes:
+      gx, gy: cells per axis (static).
+      cap: padded per-cell capacity = max occupancy (static).
+      origin: (2,) lower-left corner ``(x0, y0)``.
+      cell_size: (2,) ``(cell_w, cell_h)``.
+      cell_x, cell_y, cell_z: ``(gx*gy + 1, cap)`` padded per-cell point
+        data; coordinate pad slots hold the +inf-overflow sentinel, ``z``
+        pad slots hold 0.  The final row is all-sentinel (masked gathers).
+      counts: ``(gy, gx)`` int32 occupancy.
+      cum: ``(gy+1, gx+1)`` int32 integral image of ``counts``.
+    """
+
+    gx: int
+    gy: int
+    cap: int
+    origin: jnp.ndarray
+    cell_size: jnp.ndarray
+    cell_x: jnp.ndarray
+    cell_y: jnp.ndarray
+    cell_z: jnp.ndarray
+    counts: jnp.ndarray
+    cum: jnp.ndarray
+
+    @property
+    def n_cells(self) -> int:
+        return self.gx * self.gy
+
+    def tree_flatten(self):
+        children = (self.origin, self.cell_size, self.cell_x, self.cell_y,
+                    self.cell_z, self.counts, self.cum)
+        return children, (self.gx, self.gy, self.cap)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        gx, gy, cap = aux
+        return cls(gx, gy, cap, *children)
+
+
+def coord_sentinel(dtype):
+    """Large-but-finite coordinate whose squared distance overflows to +inf
+    (same trick as the kernel padding in ``kernels.ops``)."""
+    return jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
+
+
+def build_grid(
+    dx, dy, dz=None, *,
+    gx: int | None = None,
+    gy: int | None = None,
+    target_occupancy: float = DEFAULT_OCCUPANCY,
+    bounds: tuple[float, float, float, float] | None = None,
+) -> UniformGrid:
+    """Bucket points into a uniform grid with a ragged-to-padded cell layout.
+
+    Eager-only (the padded capacity is ``max(counts)``, a concrete value);
+    call it once per dataset outside jit and pass the resulting pytree into
+    jitted consumers.
+
+    Args:
+      dx, dy: (m,) point coordinates.  dz: optional (m,) attribute.
+      gx, gy: cells per axis; default ``ceil(sqrt(m / target_occupancy))``
+        per axis, clamped to [1, 512].
+      bounds: ``(x0, x1, y0, y1)`` grid extent; defaults to the data bbox.
+    """
+    m = int(dx.shape[0])
+    dtype = jnp.asarray(dx).dtype
+    if dz is None:
+        dz = jnp.zeros((m,), dtype)
+    if bounds is None:
+        x0, x1 = float(jnp.min(dx)), float(jnp.max(dx))
+        y0, y1 = float(jnp.min(dy)), float(jnp.max(dy))
+    else:
+        x0, x1, y0, y1 = map(float, bounds)
+    if gx is None or gy is None:
+        g = max(1, min(MAX_CELLS_PER_AXIS, math.ceil(math.sqrt(m / max(target_occupancy, 1e-9)))))
+        gx = gx or g
+        gy = gy or g
+    # degenerate spans (all points on a line/point) still need a positive cell
+    span_x = max(x1 - x0, 1e-12)
+    span_y = max(y1 - y0, 1e-12)
+    origin = jnp.asarray([x0, y0], jnp.float32)
+    cell_size = jnp.asarray([span_x / gx, span_y / gy], jnp.float32)
+
+    n_cells = gx * gy
+    cx = jnp.clip(jnp.floor((jnp.asarray(dx) - x0) / cell_size[0]).astype(jnp.int32), 0, gx - 1)
+    cy = jnp.clip(jnp.floor((jnp.asarray(dy) - y0) / cell_size[1]).astype(jnp.int32), 0, gy - 1)
+    cid = cy * gx + cx
+
+    counts_flat = jnp.zeros((n_cells,), jnp.int32).at[cid].add(1)
+    cap = max(int(jnp.max(counts_flat)), 1)
+
+    order = jnp.argsort(cid, stable=True)
+    cid_s = cid[order]
+    starts = jnp.searchsorted(cid_s, jnp.arange(n_cells, dtype=cid_s.dtype))
+    rank = jnp.arange(m, dtype=jnp.int32) - starts[cid_s].astype(jnp.int32)
+
+    big = coord_sentinel(dtype)
+    cell_x = jnp.full((n_cells + 1, cap), big, dtype).at[cid_s, rank].set(jnp.asarray(dx)[order])
+    cell_y = jnp.full((n_cells + 1, cap), big, dtype).at[cid_s, rank].set(jnp.asarray(dy)[order])
+    cell_z = jnp.zeros((n_cells + 1, cap), dtype).at[cid_s, rank].set(jnp.asarray(dz)[order])
+
+    counts = counts_flat.reshape(gy, gx)
+    cum = jnp.zeros((gy + 1, gx + 1), jnp.int32)
+    cum = cum.at[1:, 1:].set(jnp.cumsum(jnp.cumsum(counts, axis=0), axis=1))
+    return UniformGrid(gx, gy, cap, origin, cell_size, cell_x, cell_y, cell_z, counts, cum)
+
+
+def cell_of(grid: UniformGrid, x, y):
+    """Clamped home-cell indices ``(cx, cy)`` for query coordinates."""
+    cx = jnp.clip(jnp.floor((x - grid.origin[0]) / grid.cell_size[0]).astype(jnp.int32), 0, grid.gx - 1)
+    cy = jnp.clip(jnp.floor((y - grid.origin[1]) / grid.cell_size[1]).astype(jnp.int32), 0, grid.gy - 1)
+    return cx, cy
+
+
+def block_count(grid: UniformGrid, cx, cy, r):
+    """Points inside the (2r+1)^2 cell block centred at ``(cx, cy)``, O(1)
+    via the integral image.  All args broadcastable int32."""
+    xlo = jnp.clip(cx - r, 0, grid.gx)
+    xhi = jnp.clip(cx + r + 1, 0, grid.gx)
+    ylo = jnp.clip(cy - r, 0, grid.gy)
+    yhi = jnp.clip(cy + r + 1, 0, grid.gy)
+    c = grid.cum
+    return c[yhi, xhi] - c[ylo, xhi] - c[yhi, xlo] + c[ylo, xlo]
+
+
+def cover_radius(grid: UniformGrid, cx, cy):
+    """Ring radius at which the block around ``(cx, cy)`` covers the grid."""
+    return jnp.maximum(
+        jnp.maximum(cx, grid.gx - 1 - cx), jnp.maximum(cy, grid.gy - 1 - cy)
+    )
+
+
+def _ring_cell_offset(r, i):
+    """Decode perimeter index ``i in [0, 8r)`` of Chebyshev ring ``r`` into a
+    cell offset ``(ox, oy)``; ring 0 is the single home cell."""
+    rr = jnp.maximum(r, 1)
+    side = i // (2 * rr)
+    t = i % (2 * rr)
+    ox = jnp.where(side == 0, -rr + t, jnp.where(side == 1, rr, jnp.where(side == 2, rr - t, -rr)))
+    oy = jnp.where(side == 0, -rr, jnp.where(side == 1, -rr + t, jnp.where(side == 2, rr, rr - t)))
+    ox = jnp.where(r == 0, 0, ox)
+    oy = jnp.where(r == 0, 0, oy)
+    return ox, oy
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def grid_knn(grid: UniformGrid, qx, qy, k: int):
+    """Exact k nearest neighbours via expanding ring search.
+
+    Returns ``(n, k)`` squared distances, ascending.  If the grid holds
+    fewer than ``k`` points the tail is +inf (callers validate ``m >= k``).
+
+    Batched: one global ``while_loop``; each iteration folds ONE cell of the
+    current ring into every live query's k-best set (a ``(k, k+cap)``
+    branch-free merge), with two shortcuts driven by the integral image:
+    entirely-empty rings complete in a single iteration, and a query stops
+    as soon as the ring bound proves its k-best is final (see module
+    docstring for the invariant).
+    """
+    n = qx.shape[0]
+    dtype = qx.dtype
+    gx, gy = grid.gx, grid.gy
+    cx, cy = cell_of(grid, qx, qy)
+    cell_min = jnp.minimum(grid.cell_size[0], grid.cell_size[1]).astype(dtype)
+    r_cover = cover_radius(grid, cx, cy)
+    qxc, qyc = qx[:, None], qy[:, None]
+
+    def cond(state):
+        return ~jnp.all(state[3])
+
+    def body(state):
+        best, r, i, done = state
+        ring_n = jnp.where(r == 0, 1, 8 * r)
+        inner = jnp.where(r > 0, block_count(grid, cx, cy, r - 1), 0)
+        ring_cnt = block_count(grid, cx, cy, r) - inner
+        at_end = i >= ring_n
+        skip = (ring_cnt == 0) & (i == 0)  # whole ring empty: complete in one step
+        scan_now = (~done) & (~at_end) & (~skip)
+
+        ox, oy = _ring_cell_offset(r, i)
+        ccx, ccy = cx + ox, cy + oy
+        valid = scan_now & (ccx >= 0) & (ccx < gx) & (ccy >= 0) & (ccy < gy)
+        cid = jnp.where(valid, ccy * gx + ccx, grid.n_cells)  # sentinel row
+        px = grid.cell_x[cid]
+        py = grid.cell_y[cid]
+        d2 = (qxc - px) ** 2 + (qyc - py) ** 2  # pad slots overflow to +inf
+        best = jnp.where(scan_now[:, None], running_k_best(best, d2), best)
+
+        completing = (~done) & (at_end | skip)
+        kth = best[:, k - 1]
+        bound = r.astype(dtype) * cell_min
+        stop = completing & ((kth <= bound * bound) | (r >= r_cover))
+        done = done | stop
+        adv = completing & (~stop)
+        r = jnp.where(adv, r + 1, r)
+        i = jnp.where(adv, 0, jnp.where(scan_now, i + 1, i))
+        return best, r, i, done
+
+    state = (
+        jnp.full((n, k), jnp.inf, dtype),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), bool),
+    )
+    best, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def grid_r_obs(grid: UniformGrid, qx, qy, k: int):
+    """Phase-1 statistic: mean distance to the k nearest data points."""
+    return jnp.mean(jnp.sqrt(grid_knn(grid, qx, qy, k)), axis=1)
+
+
+def required_radius(grid: UniformGrid, cx, cy, k: int):
+    """Smallest ring radius whose (2r+1)^2 block holds >= k points (or the
+    whole grid).  Occupancy-only — O(max radius) integral-image lookups."""
+    n = cx.shape[0]
+    want = jnp.minimum(k, grid.cum[-1, -1])
+    r_cover = cover_radius(grid, cx, cy)
+
+    def cond(state):
+        return ~jnp.all(state[1])
+
+    def body(state):
+        r, found = state
+        ok = (block_count(grid, cx, cy, r) >= want) | (r >= r_cover)
+        return jnp.where(found | ok, r, r + 1), found | ok
+
+    r, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((n,), jnp.int32), jnp.zeros((n,), bool))
+    )
+    return r
+
+
+def safe_radius(grid: UniformGrid, qx, qy, k: int):
+    """Ring radius guaranteed (from occupancy alone, no distances) to contain
+    the true k nearest neighbours of the query at ``(qx, qy)``.
+
+    With ``r_need`` from :func:`required_radius`, every point of that block
+    is within ``Dx = ex + (r_need + 1) * cell_w`` / ``Dy = ...`` of the
+    query per axis, where ``(ex, ey)`` is the query's overhang beyond its
+    clamped home cell (0 inside the grid) — so the kth-NN distance is
+    ``<= D = sqrt(Dx^2 + Dy^2)``.  Conversely every cell at Chebyshev ``c``
+    is at distance ``>= sqrt(ex^2 + ey^2 + ((c-1) * cell_min)^2)`` (the
+    overhang adds to the axis gap for every in-grid cell), so only cells
+    with ``(c - 1) * cell_min < sqrt(D^2 - e^2)`` can matter.  For in-grid
+    queries this reduces to the plain ``(r_need + 1) * diag`` bound; for
+    out-of-grid queries the overhang correction is what keeps the guarantee
+    sound (the naive bound misses neighbours once the query is more than
+    about a cell outside the bbox).  Used by the Pallas grid kernel, whose
+    candidate neighbourhoods must be fixed before any distance is computed.
+
+    Returns ``(cx, cy, r_safe)`` (the clamped home cells are needed by every
+    caller anyway).
+    """
+    cx, cy = cell_of(grid, qx, qy)
+    cw, ch = grid.cell_size[0], grid.cell_size[1]
+    cmin = jnp.minimum(cw, ch)
+    # per-axis overhang beyond the clamped home cell's span (0 inside)
+    x_lo = grid.origin[0] + cx.astype(cw.dtype) * cw
+    y_lo = grid.origin[1] + cy.astype(ch.dtype) * ch
+    ex = jnp.maximum(jnp.maximum(x_lo - qx, qx - (x_lo + cw)), 0.0).astype(jnp.float32)
+    ey = jnp.maximum(jnp.maximum(y_lo - qy, qy - (y_lo + ch)), 0.0).astype(jnp.float32)
+    r_need = required_radius(grid, cx, cy, k)
+    dx_bound = ex + (r_need.astype(jnp.float32) + 1.0) * cw
+    dy_bound = ey + (r_need.astype(jnp.float32) + 1.0) * ch
+    slack = jnp.sqrt(jnp.maximum(dx_bound * dx_bound + dy_bound * dy_bound
+                                 - ex * ex - ey * ey, 0.0))
+    r_safe = jnp.floor(slack / cmin).astype(jnp.int32) + 1
+    return cx, cy, jnp.clip(jnp.maximum(r_safe, r_need), 0, cover_radius(grid, cx, cy))
+
+
+def morton_ids(cx, cy):
+    """Morton (Z-order) interleave of cell indices — sorting queries by this
+    keeps consecutive queries in spatially adjacent cells, so per-block
+    candidate rectangles in the grid kernel stay compact (no row-major
+    wrap-around blowup)."""
+
+    def part1by1(v):
+        v = v.astype(jnp.uint32)
+        v = (v | (v << 8)) & jnp.uint32(0x00FF00FF)
+        v = (v | (v << 4)) & jnp.uint32(0x0F0F0F0F)
+        v = (v | (v << 2)) & jnp.uint32(0x33333333)
+        v = (v | (v << 1)) & jnp.uint32(0x55555555)
+        return v
+
+    return (part1by1(cx) | (part1by1(cy) << 1)).astype(jnp.int32)

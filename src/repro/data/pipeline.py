@@ -6,7 +6,6 @@ its own slice from (step, host_id, num_hosts) — restart/elastic-safe.
 
 from __future__ import annotations
 
-import collections
 import threading
 import queue
 

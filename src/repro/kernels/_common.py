@@ -16,8 +16,23 @@ Mosaic and in interpret mode, and can be unit-tested directly.
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.aidw import AIDWParams, adaptive_alpha
+
+
+def tpu_compiler_params(dimension_semantics):
+    """Version-portable ``compiler_params`` for TPU ``pallas_call``s.
+
+    jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; which
+    name exists depends on the installed jax (0.4.x ships only the old one).
+    Every kernel module builds its dimension-semantics params through this
+    shim so a rename breaks exactly one line, caught by the CI version matrix.
+    """
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(dimension_semantics=tuple(dimension_semantics))
 
 
 def sq_dist_tile(qx, qy, dx, dy):

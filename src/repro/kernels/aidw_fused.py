@@ -30,12 +30,11 @@ from repro.kernels._common import (
     alpha_from_best,
     merge_k_best,
     sq_dist_tile,
+    tpu_compiler_params,
     weight_tile,
 )
 
-_SEMANTICS = pltpu.CompilerParams(
-    dimension_semantics=("parallel", "arbitrary", "arbitrary")
-)
+_SEMANTICS = tpu_compiler_params(("parallel", "arbitrary", "arbitrary"))
 
 
 def _fused_kernel(

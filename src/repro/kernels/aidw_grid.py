@@ -1,0 +1,166 @@
+"""Grid-accelerated AIDW — Phase 1 streams candidate neighbourhoods only.
+
+The tiled kernel's Phase 1 (kNN -> adaptive alpha) streams ALL m data points
+past every query block; that brute-force sweep dominates runtime as m grows.
+Here the host bucket-sorts the data points into a :class:`UniformGrid`
+(``repro.core.grid``), sorts the queries into Morton order so each query
+block lives in a compact patch of cells, and gathers one *candidate row* per
+block: the padded points of every cell inside the block's safe rectangle
+(per-query :func:`safe_radius`, maxed over the block, around the bounding
+box of the block's home cells — guaranteed to contain each query's true k
+nearest neighbours by occupancy alone, DESIGN.md §4).
+
+Phase 1 then runs the *same* kernel body as the tiled version
+(``_knn_kernel_soa`` — running k-best merge, alpha via Eq. 2-6), but the
+inner grid dimension walks the block's candidate row instead of the full
+data axis: per-query work drops from O(m) to O(|neighbourhood|), near O(k)
+at the paper's densities.  Phase 2 is unchanged (AIDW weights ALL m points,
+so the full-data sweep is reused verbatim via ``_weight_kernel_soa``) and
+the outputs are unsorted back to caller order.
+
+Host prep is eager-only: candidate-row width is occupancy-dependent
+(``max`` over blocks), so ``impl="grid"`` cannot be called under an outer
+``jit`` — build once, interpolate many.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.aidw import AIDWParams
+from repro.core.grid import (
+    UniformGrid,
+    build_grid,
+    cell_of,
+    coord_sentinel,
+    morton_ids,
+    safe_radius,
+)
+from repro.kernels.aidw_tiled import _SEMANTICS, _knn_kernel_soa, _weight_kernel_soa
+
+
+def _pad_tail(x, n_pad):
+    """Pad a 1-D array by repeating its last element (keeps per-block cell
+    rectangles unchanged — a repeated query adds no new candidate cells)."""
+    if n_pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.broadcast_to(x[-1], (n_pad,))])
+
+
+def gather_block_candidates(grid: UniformGrid, cx, cy, r_safe, block_q: int):
+    """Per-block candidate rows for Morton-contiguous query blocks.
+
+    Args:
+      cx, cy: (n_sorted,) clamped home cells, ``n_sorted % block_q == 0``.
+      r_safe: (n_sorted,) per-query safe ring radii.
+
+    Returns ``(cand_x, cand_y)`` of shape ``(nb, C)`` where ``C`` is the
+    batch-max rectangle size in points (eager value); masked / out-of-rect
+    slots hold the +inf-overflow sentinel.
+    """
+    nb = cx.shape[0] // block_q
+    cxb = cx.reshape(nb, block_q)
+    cyb = cy.reshape(nb, block_q)
+    rb = r_safe.reshape(nb, block_q).max(axis=1)
+    xlo = jnp.clip(cxb.min(axis=1) - rb, 0, grid.gx - 1)
+    xhi = jnp.clip(cxb.max(axis=1) + rb, 0, grid.gx - 1)
+    ylo = jnp.clip(cyb.min(axis=1) - rb, 0, grid.gy - 1)
+    yhi = jnp.clip(cyb.max(axis=1) + rb, 0, grid.gy - 1)
+    wd = xhi - xlo + 1
+    ht = yhi - ylo + 1
+    c_cells = int(jnp.max(wd * ht))  # eager: fixes the candidate-row width
+
+    j = jnp.arange(c_cells, dtype=jnp.int32)[None, :]
+    jx = j % wd[:, None]
+    jy = j // wd[:, None]
+    valid = jy < ht[:, None]
+    ccx = xlo[:, None] + jx
+    ccy = ylo[:, None] + jy
+    cid = jnp.where(valid, ccy * grid.gx + ccx, grid.n_cells)  # sentinel row
+    cand_x = grid.cell_x[cid].reshape(nb, c_cells * grid.cap)
+    cand_y = grid.cell_y[cid].reshape(nb, c_cells * grid.cap)
+    return cand_x, cand_y
+
+
+def aidw_grid_soa(
+    dx, dy, dz, qx, qy, *,
+    params: AIDWParams, area: float, m_real: int,
+    grid: UniformGrid | None = None,
+    block_q: int = 256, block_d: int = 512, interpret: bool = False,
+):
+    """Two-phase grid AIDW.  Raw 1-D unpadded inputs; returns
+    ``(z_hat, alpha)``, shape ``(n,)`` each, in caller query order.
+
+    ``grid`` may be prebuilt (reuse across query batches); otherwise one is
+    built from the data points at the default occupancy.
+    """
+    n = qx.shape[0]
+    dtype = qx.dtype
+    k = params.k
+    if grid is None:
+        grid = build_grid(dx, dy, dz)
+
+    # ---- host prep (eager): Morton-sort queries, gather candidate rows ----
+    cx, cy = cell_of(grid, qx, qy)
+    order = jnp.argsort(morton_ids(cx, cy), stable=True)
+    n_pad = (-n) % block_q
+    qx_s = _pad_tail(qx[order], n_pad)
+    qy_s = _pad_tail(qy[order], n_pad)
+    cx_s, cy_s, r_safe = safe_radius(grid, qx_s, qy_s, k)
+    cand_x, cand_y = gather_block_candidates(grid, cx_s, cy_s, r_safe, block_q)
+
+    nb, c_width = cand_x.shape
+    n_tot = nb * block_q
+    bd = min(block_d, max(((c_width + 127) // 128) * 128, 128))
+    c_pad = (-c_width) % bd
+    if c_pad:
+        big = coord_sentinel(dtype)
+        pad = jnp.full((nb, c_pad), big, dtype)
+        cand_x = jnp.concatenate([cand_x, pad], axis=1)
+        cand_y = jnp.concatenate([cand_y, pad], axis=1)
+    c_tot = c_width + c_pad
+
+    # ---- phase 1: kNN/alpha over candidate rows (same body as tiled) ----
+    qx2 = qx_s[:, None]
+    qy2 = qy_s[:, None]
+    q_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+    c_spec = pl.BlockSpec((1, bd), lambda i, j: (i, j))
+    o_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+    alpha = pl.pallas_call(
+        functools.partial(_knn_kernel_soa, m_real=m_real, area=area, params=params),
+        grid=(nb, c_tot // bd),
+        in_specs=[q_spec, q_spec, c_spec, c_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tot, 1), dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, k), dtype)],
+        compiler_params=_SEMANTICS,
+        interpret=interpret,
+    )(qx2, qy2, cand_x, cand_y)
+
+    # ---- phase 2: full-data weighted sweep (AIDW weights all m points) ----
+    big = coord_sentinel(dtype)
+    m_pad = (-m_real) % bd
+    dxp = jnp.concatenate([dx, jnp.full((m_pad,), big, dtype)])[None, :]
+    dyp = jnp.concatenate([dy, jnp.full((m_pad,), big, dtype)])[None, :]
+    dzp = jnp.concatenate([dz, jnp.zeros((m_pad,), dtype)])[None, :]
+    grid2 = (nb, dxp.shape[1] // bd)
+    d_spec = pl.BlockSpec((1, bd), lambda i, j: (0, j))
+    zhat = pl.pallas_call(
+        functools.partial(_weight_kernel_soa, eps=params.exact_hit_eps),
+        grid=grid2,
+        in_specs=[q_spec, q_spec, q_spec, d_spec, d_spec, d_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tot, 1), dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, 1), dtype) for _ in range(4)],
+        compiler_params=_SEMANTICS,
+        interpret=interpret,
+    )(qx2, qy2, alpha * 0.5, dxp, dyp, dzp)
+
+    # ---- unsort back to caller order ----
+    inv = jnp.argsort(order)
+    return zhat[:n, 0][inv], alpha[:n, 0][inv]

@@ -21,17 +21,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.aidw import AIDWParams
 from repro.kernels._common import (
     alpha_from_best,
     merge_k_best,
     sq_dist_tile,
+    tpu_compiler_params,
     weight_tile,
 )
 
-_SEMANTICS = pltpu.CompilerParams(dimension_semantics=("parallel",))
+_SEMANTICS = tpu_compiler_params(("parallel",))
 
 
 def _naive_kernel_soa(qx_ref, qy_ref, dx_ref, dy_ref, dz_ref, out_ref, alpha_ref, *, m_real, area, params):

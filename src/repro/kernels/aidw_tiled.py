@@ -28,10 +28,11 @@ from repro.kernels._common import (
     alpha_from_best,
     merge_k_best,
     sq_dist_tile,
+    tpu_compiler_params,
     weight_tile,
 )
 
-_SEMANTICS = pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+_SEMANTICS = tpu_compiler_params(("parallel", "arbitrary"))
 
 
 # ---------------------------------------------------------------- SoA family

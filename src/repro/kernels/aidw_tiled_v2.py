@@ -25,9 +25,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.aidw import AIDWParams
-from repro.kernels._common import alpha_from_best, merge_k_best, sq_dist_tile
+from repro.kernels._common import (
+    alpha_from_best,
+    merge_k_best,
+    sq_dist_tile,
+    tpu_compiler_params,
+)
 
-_SEMANTICS = pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+_SEMANTICS = tpu_compiler_params(("parallel", "arbitrary"))
 
 
 def _knn_kernel_v2(qx_ref, qy_ref, dx_ref, dy_ref, alpha_ref, nmerge_ref, best, *, m_real, area, params):

@@ -22,7 +22,7 @@ from repro.kernels.aidw_naive import aidw_naive_aoas, aidw_naive_soa
 from repro.kernels.aidw_tiled import aidw_tiled_aoas, aidw_tiled_soa
 from repro.kernels.idw_tiled import idw_tiled_soa
 
-Impl = Literal["naive", "tiled", "fused", "binned"]
+Impl = Literal["naive", "tiled", "fused", "binned", "grid"]
 Layout = Literal["soa", "aoas"]
 
 
@@ -45,10 +45,6 @@ def _sentinel(dtype):
     return jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "area", "impl", "layout", "block_q", "block_d", "interpret"),
-)
 def aidw(
     dx, dy, dz, qx, qy,
     *,
@@ -59,13 +55,57 @@ def aidw(
     block_q: int = 256,
     block_d: int = 512,
     interpret: bool | None = None,
+    grid=None,
 ):
     """AIDW via the Pallas kernels.  Returns ``(z_hat, alpha)``, shape (n,).
 
     ``impl``: "naive" (paper, no VMEM tiling), "tiled" (paper, shared-memory
-    analogue), "fused" (beyond-paper single-launch two-phase; SoA only).
+    analogue), "binned" (approximate prefilter), "fused" (beyond-paper
+    single-launch two-phase; SoA only), "grid" (spatial-partition Phase 1 —
+    eager-only dispatch, see ``kernels.aidw_grid``; ``grid=`` accepts a
+    prebuilt ``repro.core.grid.UniformGrid`` for reuse across query sets).
     ``layout``: "soa" | "aoas" — layout of the streamed data-point array.
     """
+    if impl == "grid":
+        from repro.kernels.aidw_grid import aidw_grid_soa
+
+        if layout != "soa":
+            raise ValueError("impl='grid' is SoA-only")
+        m = dx.shape[0]
+        if m < params.k:
+            raise ValueError(f"need at least k={params.k} data points, got {m}")
+        return aidw_grid_soa(
+            dx, dy, dz, qx, qy,
+            params=params, area=float(area), m_real=m, grid=grid,
+            block_q=block_q, block_d=block_d, interpret=_auto_interpret(interpret),
+        )
+    if grid is not None:
+        raise ValueError("grid= is only meaningful with impl='grid'")
+    return _aidw_dense(
+        dx, dy, dz, qx, qy,
+        params=params, area=area, impl=impl, layout=layout,
+        block_q=block_q, block_d=block_d, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "area", "impl", "layout", "block_q", "block_d", "interpret"),
+)
+def _aidw_dense(
+    dx, dy, dz, qx, qy,
+    *,
+    params: AIDWParams,
+    area: float,
+    impl: Impl,
+    layout: Layout,
+    block_q: int,
+    block_d: int,
+    interpret: bool | None,
+):
+    """The dense (full-sweep) kernel family behind :func:`aidw` — jitted;
+    ``impl='grid'`` is dispatched eagerly above (its candidate shapes are
+    occupancy-dependent and cannot be fixed under trace)."""
     interp = _auto_interpret(interpret)
     m, n = dx.shape[0], qx.shape[0]
     if m < params.k:

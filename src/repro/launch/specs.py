@@ -11,7 +11,6 @@ from jax.sharding import NamedSharding
 
 from repro.configs import ArchConfig, ShapeConfig
 from repro.models import params as pm
-from repro.optim import AdamWConfig, opt_state_axes
 from repro.sharding.rules import RULE_SETS, sharding_for
 
 TRAIN_PARAM_DTYPE = jnp.float32

@@ -19,8 +19,6 @@ import dataclasses
 import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import SHAPES, ShapeConfig, get_arch, smoke

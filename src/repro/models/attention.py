@@ -11,13 +11,12 @@ full cache with an iota mask — the cache's ``S_max`` axis carries the
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.layers import apply_mrope, apply_rope, dense
-from repro.models.params import ParamSpec, dense_spec
+from repro.models.params import dense_spec
 from repro.sharding.rules import logical_constraint
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)

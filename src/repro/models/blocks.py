@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.models.attention import attn_spec, attention
 from repro.models.layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
 from repro.models.params import ParamSpec
-from repro.models.mamba2 import mamba, mamba_cache_spec, mamba_dims, mamba_spec
+from repro.models.mamba2 import mamba, mamba_cache_spec, mamba_spec
 from repro.models.moe import moe, moe_spec
 from repro.sharding.rules import logical_constraint
 

@@ -7,7 +7,6 @@ production steps), with norms and softmax internally upcast to f32.
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -3,6 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra not installed (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

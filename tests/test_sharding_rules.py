@@ -2,7 +2,6 @@
 
 import numpy as np
 import jax
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.sharding.rules import RULE_SETS, spec_for

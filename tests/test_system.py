@@ -3,7 +3,6 @@
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCHS, SHAPES, cell_is_applicable
 from repro.core.aidw import AIDWParams

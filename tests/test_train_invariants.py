@@ -2,7 +2,6 @@
 determinism — the properties the fault-tolerant loop and elastic restarts
 rely on."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
