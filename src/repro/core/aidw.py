@@ -181,30 +181,26 @@ def aidw_interpolate(
 
     ``knn="grid"`` replaces the Phase-1 brute-force k-best scan with the
     uniform-grid ring search of ``repro.core.grid`` (near-O(k) per query);
-    Phase 2 (weights over ALL m points) is identical either way.  The grid
-    path is eager-only at the top level (``build_grid`` needs concrete
-    occupancy); pass a prebuilt ``grid=`` to amortise across query batches.
+    Phase 2 (weights over ALL m points) is identical either way.
+
+    This is a convenience over the plan/execute engine (``repro.engine``,
+    impl="chunked"): each call builds a chunked plan and runs the jitted
+    execute step.  Grid building is the one eager step (concrete occupancy);
+    pass a prebuilt ``grid=`` — or hold the plan yourself — to amortise
+    across query batches.  The ``knn="brute"`` path plans traceably, which
+    is how the distributed sharded path reuses it inside ``shard_map``.
     """
-    if knn not in ("brute", "grid"):
-        raise ValueError(f"knn must be 'brute' or 'grid', got {knn!r}")
+    from repro.engine import build_plan, execute
+
     if knn == "brute" and grid is not None:
         raise ValueError("grid= is only meaningful with knn='grid'")
     if area is None and params.area is None:
         raise ValueError("jit path requires a static area; pass area= or set params.area")
-    a = area if area is not None else params.area
-    if knn == "grid":
-        from repro.core.grid import build_grid, grid_r_obs
-
-        if grid is None:
-            grid = build_grid(dx, dy, dz)
-        r_obs = grid_r_obs(grid, qx, qy, params.k)
-    else:
-        r_obs = brute_r_obs(dx, dy, qx, qy, params.k, q_chunk=q_chunk, d_chunk=d_chunk)
-    alpha = adaptive_alpha(r_obs, dx.shape[0], a, params)
-    zhat = _interpolate_pass2(
-        dx, dy, dz, qx, qy, alpha, params, area=float(a), q_chunk=q_chunk, d_chunk=d_chunk
+    plan = build_plan(
+        dx, dy, dz, params=params, area=area, impl="chunked", knn=knn,
+        q_chunk=q_chunk, d_chunk=d_chunk, grid=grid,
     )
-    return zhat, alpha
+    return execute(plan, qx, qy)
 
 
 @partial(jax.jit, static_argnames=("k", "q_chunk", "d_chunk"))

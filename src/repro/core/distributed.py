@@ -33,6 +33,28 @@ from repro.core.aidw import AIDWParams, adaptive_alpha, _sq_dists
 from repro.core.knn import running_k_best
 
 
+def shard_map_compat(**kw):
+    """Version-portable ``shard_map`` decorator (same policy as the
+    compiler-params shim in ``kernels/_common.py``): newer jax exposes
+    ``jax.shard_map`` with ``check_vma``; 0.4.x ships
+    ``jax.experimental.shard_map.shard_map`` with the equivalent knob named
+    ``check_rep`` and no vma typing."""
+    if hasattr(jax, "shard_map"):
+        return functools.partial(jax.shard_map, **kw)
+    from jax.experimental.shard_map import shard_map
+
+    if "check_vma" in kw:
+        kw["check_rep"] = kw.pop("check_vma")
+    return functools.partial(shard_map, **kw)
+
+
+def _pvary(x, axes):
+    """``lax.pvary`` marks a value device-varying for the vma type system;
+    on jax versions without it (no vma typing) it is the identity."""
+    fn = getattr(jax.lax, "pvary", None)
+    return x if fn is None else fn(x, axes)
+
+
 def _ring_perm(n: int):
     return [(i, (i + 1) % n) for i in range(n)]
 
@@ -126,8 +148,7 @@ def ring_aidw(
     qc = min(q_chunk, qx.shape[0] // nshards)
     dc = min(d_chunk, dx.shape[0] // nshards)
 
-    @functools.partial(
-        jax.shard_map,
+    @shard_map_compat(
         mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec),
         out_specs=(spec, spec),
@@ -146,7 +167,7 @@ def ring_aidw(
             best = _fold_knn(best, qx_l, qy_l, cx, cy, qc, dc)
             return best, nx, ny
 
-        best0 = jax.lax.pvary(jnp.full((nq_l, k), jnp.inf, dtype), axes)
+        best0 = _pvary(jnp.full((nq_l, k), jnp.inf, dtype), axes)
         best, _, _ = jax.lax.fori_loop(0, nshards, knn_step, (best0, dx_l, dy_l))
         alpha = adaptive_alpha(jnp.mean(jnp.sqrt(best), axis=1), m_total, area, params)
         ah = alpha * 0.5
@@ -160,8 +181,8 @@ def ring_aidw(
             acc = _fold_weights(acc, ah, qx_l, qy_l, cx, cy, cz, qc, dc)
             return acc, nx, ny, nz
 
-        zeros = jax.lax.pvary(jnp.zeros((nq_l,), dtype), axes)
-        inf0 = jax.lax.pvary(jnp.full((nq_l,), jnp.inf, dtype), axes)
+        zeros = _pvary(jnp.zeros((nq_l,), dtype), axes)
+        inf0 = _pvary(jnp.full((nq_l,), jnp.inf, dtype), axes)
         acc0 = (zeros, zeros, inf0, zeros)
         (sw, swz, min_d2, hit_z), _, _, _ = jax.lax.fori_loop(
             0, nshards, w_step, (acc0, dx_l, dy_l, dz_l)
@@ -208,8 +229,7 @@ def ring_aidw_rotate_queries(
     qc = min(q_chunk, qx.shape[0] // nshards)
     dc = min(d_chunk, dx.shape[0] // nshards)
 
-    @functools.partial(
-        jax.shard_map,
+    @shard_map_compat(
         mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec),
         out_specs=(spec, spec),
@@ -228,7 +248,7 @@ def ring_aidw_rotate_queries(
             nbest = jax.lax.ppermute(best, axes, perm)
             return nqx, nqy, nbest
 
-        best0 = jax.lax.pvary(jnp.full((nq_l, k), jnp.inf, dtype), axes)
+        best0 = _pvary(jnp.full((nq_l, k), jnp.inf, dtype), axes)
         qx_r, qy_r, best = jax.lax.fori_loop(0, nshards, knn_step, (qx_l, qy_l, best0))
         # after nshards rotations every slab is home again
         alpha = adaptive_alpha(jnp.mean(jnp.sqrt(best), axis=1), m_total, area, params)
@@ -244,8 +264,8 @@ def ring_aidw_rotate_queries(
             nacc = jax.tree.map(lambda a: jax.lax.ppermute(a, axes, perm), acc)
             return nqx, nqy, nah, nacc
 
-        zeros = jax.lax.pvary(jnp.zeros((nq_l,), dtype), axes)
-        inf0 = jax.lax.pvary(jnp.full((nq_l,), jnp.inf, dtype), axes)
+        zeros = _pvary(jnp.zeros((nq_l,), dtype), axes)
+        inf0 = _pvary(jnp.full((nq_l,), jnp.inf, dtype), axes)
         acc0 = (zeros, zeros, inf0, zeros)
         _, _, _, (sw, swz, min_d2, hit_z) = jax.lax.fori_loop(
             0, nshards, w_step, (qx_r, qy_r, ah, acc0)
@@ -263,8 +283,10 @@ def sharded_queries_aidw(
     """Simpler production mode when the data set fits per-chip: data points
     replicated, queries sharded over all axes — zero communication (the
     paper's "naturally parallel" observation, lifted to a pod).  The local
-    solve is the tiled interpolator (bounded temp memory)."""
-    from repro.core.aidw import aidw_interpolate
+    solve goes through the plan/execute engine (a chunked-brute plan builds
+    traceably, so each shard plans *inside* ``shard_map``), which keeps the
+    padding/sentinel/chunking logic identical to the single-host path."""
+    from repro.engine import build_plan, execute
 
     axes = tuple(mesh.axis_names)
     qspec = P(axes)
@@ -274,8 +296,7 @@ def sharded_queries_aidw(
     qc = min(q_chunk, qx.shape[0] // nshards)
     dc = min(d_chunk, dx.shape[0])
 
-    @functools.partial(
-        jax.shard_map,
+    @shard_map_compat(
         mesh=mesh,
         in_specs=(P(), P(), P(), qspec, qspec),
         out_specs=(qspec, qspec),
@@ -283,8 +304,10 @@ def sharded_queries_aidw(
         # scan carries are created unvarying and trip the vma typing
     )
     def body(dx_r, dy_r, dz_r, qx_l, qy_l):
-        return aidw_interpolate(
-            dx_r, dy_r, dz_r, qx_l, qy_l, params, area=area, q_chunk=qc, d_chunk=dc
+        plan = build_plan(
+            dx_r, dy_r, dz_r, params=params, area=area, impl="chunked",
+            q_chunk=qc, d_chunk=dc,
         )
+        return execute(plan, qx_l, qy_l)
 
     return body(dx, dy, dz, qx, qy)

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.knn import running_k_best
+from repro.core.layouts import coord_sentinel  # re-export: the one sentinel definition
 
 # Default mean points-per-cell the auto-resolution aims for.  ~16 keeps the
 # home 3x3 block at ~144 expected points — comfortably above the paper's
@@ -70,6 +71,13 @@ class UniformGrid:
         pad slots hold 0.  The final row is all-sentinel (masked gathers).
       counts: ``(gy, gx)`` int32 occupancy.
       cum: ``(gy+1, gx+1)`` int32 integral image of ``counts``.
+      pt_x, pt_y, pt_z: ``(m + 1,)`` CSR twin of the padded layout — the
+        points sorted by cell id, with one trailing sentinel slot (index
+        ``m``) so masked gathers stay in-bounds.  Cell ``c`` owns the
+        contiguous run ``pt_*[starts[c]:starts[c+1]]``; a *row* of cells
+        ``(y, xlo..xhi)`` is likewise one contiguous run — the property the
+        static-shape candidate gather of ``repro.engine`` exploits.
+      starts: ``(gx*gy + 1,)`` int32 CSR row pointers into ``pt_*``.
     """
 
     gx: int
@@ -82,14 +90,23 @@ class UniformGrid:
     cell_z: jnp.ndarray
     counts: jnp.ndarray
     cum: jnp.ndarray
+    pt_x: jnp.ndarray
+    pt_y: jnp.ndarray
+    pt_z: jnp.ndarray
+    starts: jnp.ndarray
 
     @property
     def n_cells(self) -> int:
         return self.gx * self.gy
 
+    @property
+    def n_points(self) -> int:
+        return self.pt_x.shape[0] - 1
+
     def tree_flatten(self):
         children = (self.origin, self.cell_size, self.cell_x, self.cell_y,
-                    self.cell_z, self.counts, self.cum)
+                    self.cell_z, self.counts, self.cum, self.pt_x, self.pt_y,
+                    self.pt_z, self.starts)
         return children, (self.gx, self.gy, self.cap)
 
     @classmethod
@@ -98,10 +115,6 @@ class UniformGrid:
         return cls(gx, gy, cap, *children)
 
 
-def coord_sentinel(dtype):
-    """Large-but-finite coordinate whose squared distance overflows to +inf
-    (same trick as the kernel padding in ``kernels.ops``)."""
-    return jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
 
 
 def build_grid(
@@ -152,18 +165,24 @@ def build_grid(
 
     order = jnp.argsort(cid, stable=True)
     cid_s = cid[order]
-    starts = jnp.searchsorted(cid_s, jnp.arange(n_cells, dtype=cid_s.dtype))
-    rank = jnp.arange(m, dtype=jnp.int32) - starts[cid_s].astype(jnp.int32)
+    starts = jnp.searchsorted(cid_s, jnp.arange(n_cells + 1, dtype=cid_s.dtype)).astype(jnp.int32)
+    rank = jnp.arange(m, dtype=jnp.int32) - starts[cid_s]
 
     big = coord_sentinel(dtype)
-    cell_x = jnp.full((n_cells + 1, cap), big, dtype).at[cid_s, rank].set(jnp.asarray(dx)[order])
-    cell_y = jnp.full((n_cells + 1, cap), big, dtype).at[cid_s, rank].set(jnp.asarray(dy)[order])
-    cell_z = jnp.zeros((n_cells + 1, cap), dtype).at[cid_s, rank].set(jnp.asarray(dz)[order])
+    dx_s, dy_s, dz_s = jnp.asarray(dx)[order], jnp.asarray(dy)[order], jnp.asarray(dz)[order]
+    cell_x = jnp.full((n_cells + 1, cap), big, dtype).at[cid_s, rank].set(dx_s)
+    cell_y = jnp.full((n_cells + 1, cap), big, dtype).at[cid_s, rank].set(dy_s)
+    cell_z = jnp.zeros((n_cells + 1, cap), dtype).at[cid_s, rank].set(dz_s)
+    # CSR twin: sorted points + row pointers, one trailing sentinel slot
+    pt_x = jnp.concatenate([dx_s, jnp.full((1,), big, dtype)])
+    pt_y = jnp.concatenate([dy_s, jnp.full((1,), big, dtype)])
+    pt_z = jnp.concatenate([dz_s, jnp.zeros((1,), dtype)])
 
     counts = counts_flat.reshape(gy, gx)
     cum = jnp.zeros((gy + 1, gx + 1), jnp.int32)
     cum = cum.at[1:, 1:].set(jnp.cumsum(jnp.cumsum(counts, axis=0), axis=1))
-    return UniformGrid(gx, gy, cap, origin, cell_size, cell_x, cell_y, cell_z, counts, cum)
+    return UniformGrid(gx, gy, cap, origin, cell_size, cell_x, cell_y, cell_z,
+                       counts, cum, pt_x, pt_y, pt_z, starts)
 
 
 def cell_of(grid: UniformGrid, x, y):
@@ -316,6 +335,17 @@ def safe_radius(grid: UniformGrid, qx, qy, k: int):
     caller anyway).
     """
     cx, cy = cell_of(grid, qx, qy)
+    r_need = required_radius(grid, cx, cy, k)
+    return cx, cy, safe_radius_from_need(grid, qx, qy, cx, cy, r_need)
+
+
+def safe_radius_from_need(grid: UniformGrid, qx, qy, cx, cy, r_need):
+    """The closed-form half of :func:`safe_radius`: given each query's
+    clamped home cell and its occupancy-only ``required_radius``, return the
+    containment-safe ring radius.  Split out so jitted consumers (the
+    plan/execute engine) can replace the ``required_radius`` while-loop with
+    a plan-time per-cell table lookup and keep the overhang correction
+    exact for out-of-grid queries."""
     cw, ch = grid.cell_size[0], grid.cell_size[1]
     cmin = jnp.minimum(cw, ch)
     # per-axis overhang beyond the clamped home cell's span (0 inside)
@@ -323,13 +353,44 @@ def safe_radius(grid: UniformGrid, qx, qy, k: int):
     y_lo = grid.origin[1] + cy.astype(ch.dtype) * ch
     ex = jnp.maximum(jnp.maximum(x_lo - qx, qx - (x_lo + cw)), 0.0).astype(jnp.float32)
     ey = jnp.maximum(jnp.maximum(y_lo - qy, qy - (y_lo + ch)), 0.0).astype(jnp.float32)
-    r_need = required_radius(grid, cx, cy, k)
     dx_bound = ex + (r_need.astype(jnp.float32) + 1.0) * cw
     dy_bound = ey + (r_need.astype(jnp.float32) + 1.0) * ch
     slack = jnp.sqrt(jnp.maximum(dx_bound * dx_bound + dy_bound * dy_bound
                                  - ex * ex - ey * ey, 0.0))
     r_safe = jnp.floor(slack / cmin).astype(jnp.int32) + 1
-    return cx, cy, jnp.clip(jnp.maximum(r_safe, r_need), 0, cover_radius(grid, cx, cy))
+    return jnp.clip(jnp.maximum(r_safe, r_need), 0, cover_radius(grid, cx, cy))
+
+
+def required_radius_table(grid: UniformGrid, k: int):
+    """``(gy, gx)`` int32 table of :func:`required_radius` for every cell.
+
+    Occupancy-only, so it depends on the data alone — computed once at plan
+    time (eagerly) and looked up per query inside the traced execute step,
+    replacing the data-dependent while-loop on the hot path."""
+    ys, xs = jnp.meshgrid(
+        jnp.arange(grid.gy, dtype=jnp.int32),
+        jnp.arange(grid.gx, dtype=jnp.int32),
+        indexing="ij",
+    )
+    return required_radius(grid, xs.reshape(-1), ys.reshape(-1), k).reshape(grid.gy, grid.gx)
+
+
+def static_cell_radius(grid: UniformGrid, r_need_table):
+    """Per-cell safe ring radius for a query anywhere *inside* the cell
+    (overhang 0) — the worst case the plan's static candidate capacity must
+    cover for in-bbox queries.  Vectorised twin of the in-grid branch of
+    :func:`safe_radius_from_need`."""
+    cw, ch = grid.cell_size[0], grid.cell_size[1]
+    cmin = jnp.minimum(cw, ch)
+    rf = r_need_table.astype(jnp.float32) + 1.0
+    slack = jnp.sqrt((rf * cw) ** 2 + (rf * ch) ** 2)
+    r_safe = jnp.floor(slack / cmin).astype(jnp.int32) + 1
+    ys, xs = jnp.meshgrid(
+        jnp.arange(grid.gy, dtype=jnp.int32),
+        jnp.arange(grid.gx, dtype=jnp.int32),
+        indexing="ij",
+    )
+    return jnp.clip(jnp.maximum(r_safe, r_need_table), 0, cover_radius(grid, xs, ys))
 
 
 def morton_ids(cx, cy):

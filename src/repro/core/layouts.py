@@ -31,6 +31,31 @@ class PointSet:
         return PointSet(self.x.astype(dtype), self.y.astype(dtype), self.z.astype(dtype))
 
 
+def coord_sentinel(dtype):
+    """Large-but-finite padding coordinate: its squared distance overflows to
+    +inf, so a pad point carries weight ``exp(-a*inf) = 0`` and can never
+    enter a k-best set.  The single definition behind every padded layout
+    (kernel streams, grid cells, plan data) — see DESIGN.md §6."""
+    return jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
+
+
+def pad_to(x, mult: int, value):
+    """Pad a 1-D array to the next multiple of ``mult`` with ``value``.
+    Static given ``x.shape`` — safe under jit."""
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), value, x.dtype)])
+
+
+def pad_tail(x, n_pad: int):
+    """Pad a 1-D array by repeating its last element.  Used for query blocks
+    (a repeated query adds no new candidate cells to a block rectangle)."""
+    if n_pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.broadcast_to(x[-1], (n_pad,))])
+
+
 def soa_to_aoas(x, y, z=None):
     """Pack SoA arrays into an (m, 4) aligned-struct array (x, y, z, 0)."""
     m = x.shape[0]

@@ -1,0 +1,204 @@
+"""Execute — the traced half of the plan/execute engine.
+
+``execute(plan, qx, qy)`` is a pure function of its arguments for every
+impl.  All shapes inside are fixed by (plan statics, query count), so the
+jitted entry points compile once per (plan configuration, query shape) and
+hit the cache on every further batch — the "build once, execute per
+request" serving shape.
+
+The grid path (DESIGN.md §6) runs entirely under the trace: Morton sort,
+per-query safe radii from the plan's ``required_radius`` table (closed form
+— no while-loop), the static-capacity CSR candidate gather, Phase 1 over
+candidate rows and the full-data Phase 2.  Exactness is unconditional: when
+a query batch needs more candidates than the plan's capacity (far
+out-of-bbox queries, query distributions unlike the data), a ``lax.cond``
+switches Phase 1 to the exact expanding-ring search — slower, never wrong.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aidw import _interpolate_pass2, adaptive_alpha, brute_r_obs
+from repro.core.grid import cell_of, grid_r_obs, morton_ids, safe_radius_from_need
+from repro.core.layouts import pad_tail, pad_to
+from repro.engine.plan import InterpolationPlan
+from repro.kernels.aidw_fused import aidw_fused_soa
+from repro.kernels.aidw_grid import (
+    block_rectangles,
+    gather_candidates_csr,
+    phase1_alpha_from_candidates,
+    phase2_weights_full,
+)
+from repro.kernels.aidw_naive import aidw_naive_aoas, aidw_naive_soa
+from repro.kernels.aidw_tiled import aidw_tiled_aoas, aidw_tiled_soa
+from repro.kernels.aidw_tiled_v2 import aidw_tiled_v2_soa
+from repro.kernels.idw_tiled import idw_tiled_soa
+
+
+def _execute_grid(plan: InterpolationPlan, qx, qy):
+    grid = plan.grid
+    params = plan.params
+    n = qx.shape[0]
+    dtype = qx.dtype
+
+    # Morton-sort queries so each block's home cells form a compact patch,
+    # pad the tail by repetition (adds no candidate cells)
+    cx, cy = cell_of(grid, qx, qy)
+    order = jnp.argsort(morton_ids(cx, cy), stable=True)
+    n_pad = (-n) % plan.block_q
+    qx_s = pad_tail(qx[order], n_pad)
+    qy_s = pad_tail(qy[order], n_pad)
+    cx_s, cy_s = cell_of(grid, qx_s, qy_s)
+
+    # containment-safe radii: plan-time table + closed-form overhang term
+    r_need = plan.r_need[cy_s, cx_s]
+    r_safe = safe_radius_from_need(grid, qx_s, qy_s, cx_s, cy_s, r_need)
+    xlo, xhi, ylo, yhi = block_rectangles(grid, cx_s, cy_s, r_safe, plan.block_q)
+    cand_x, cand_y, need = gather_candidates_csr(
+        grid, xlo, xhi, ylo, yhi, plan.cand_capacity
+    )
+    overflow = jnp.any(need > plan.cand_capacity)
+
+    def _phase1_fast(_):
+        return phase1_alpha_from_candidates(
+            qx_s, qy_s, cand_x, cand_y,
+            params=params, area=plan.area, m_real=plan.m,
+            block_q=plan.block_q, block_d=plan.cand_block_d,
+            interpret=plan.interpret,
+        )
+
+    def _phase1_exact(_):
+        r_obs = grid_r_obs(grid, qx_s, qy_s, params.k)
+        return adaptive_alpha(r_obs, plan.m, plan.area, params).astype(dtype)[:, None]
+
+    alpha = jax.lax.cond(overflow, _phase1_exact, _phase1_fast, None)
+
+    dxp, dyp, dzp = plan.data
+    zhat = phase2_weights_full(
+        qx_s, qy_s, alpha, dxp, dyp, dzp,
+        eps=params.exact_hit_eps, block_q=plan.block_q, block_d=plan.block_d,
+        interpret=plan.interpret,
+    )
+    inv = jnp.argsort(order)
+    stats = {"grid_fallback": overflow, "cand_need_max": jnp.max(need)}
+    return zhat[:n, 0][inv], alpha[:n, 0][inv], stats
+
+
+def _execute_dense(plan: InterpolationPlan, qx, qy):
+    params = plan.params
+    n = qx.shape[0]
+    dtype = qx.dtype
+    zero = jnp.zeros((), dtype)
+    qxp = pad_to(qx, plan.block_q, zero)
+    qyp = pad_to(qy, plan.block_q, zero)
+    kw = dict(params=params, area=plan.area, m_real=plan.m, interpret=plan.interpret)
+    stats = {}
+
+    if plan.layout == "aoas":
+        (data,) = plan.data
+        qx2, qy2 = qxp[None, :], qyp[None, :]
+        if plan.impl == "naive":
+            z, a = aidw_naive_aoas(data, qx2, qy2, block_q=plan.block_q, **kw)
+        else:  # tiled (build_plan rejects the rest for aoas)
+            z, a = aidw_tiled_aoas(
+                data, qx2, qy2, block_q=plan.block_q, block_d=plan.block_d, **kw
+            )
+        return z[0, :n], a[0, :n], stats
+
+    dx2, dy2, dz2 = plan.data
+    qx2, qy2 = qxp[:, None], qyp[:, None]
+    if plan.impl == "naive":
+        z, a = aidw_naive_soa(dx2, dy2, dz2, qx2, qy2, block_q=plan.block_q, **kw)
+    elif plan.impl == "tiled":
+        z, a = aidw_tiled_soa(
+            dx2, dy2, dz2, qx2, qy2, block_q=plan.block_q, block_d=plan.block_d, **kw
+        )
+    elif plan.impl == "binned":
+        # nbins: power-of-two divisor of block_d near 6k (see DESIGN.md §3)
+        nbins = 16
+        while nbins * 2 <= min(6 * params.k, plan.block_d // 4):
+            nbins *= 2
+        z, a = aidw_tiled_soa(
+            dx2, dy2, dz2, qx2, qy2, block_q=plan.block_q, block_d=plan.block_d,
+            nbins=nbins, **kw,
+        )
+    elif plan.impl == "fused":
+        z, a = aidw_fused_soa(
+            dx2, dy2, dz2, qx2, qy2, block_q=plan.block_q, block_d=plan.block_d, **kw
+        )
+    else:  # tiled_v2: threshold-skip kNN pass + measured merge fraction
+        z, a, merges = aidw_tiled_v2_soa(
+            dx2, dy2, dz2, qx2, qy2, block_q=plan.block_q, block_d=plan.block_d, **kw
+        )
+        n_tiles = dx2.shape[1] // plan.block_d
+        stats = {
+            "merge_fraction": jnp.sum(merges).astype(jnp.float32)
+            / (merges.shape[0] * n_tiles)
+        }
+    return z[:n, 0], a[:n, 0], stats
+
+
+def _execute_idw(plan: InterpolationPlan, qx, qy):
+    n = qx.shape[0]
+    dtype = qx.dtype
+    zero = jnp.zeros((), dtype)
+    qx2 = pad_to(qx, plan.block_q, zero)[:, None]
+    qy2 = pad_to(qy, plan.block_q, zero)[:, None]
+    dx2, dy2, dz2 = plan.data
+    z = idw_tiled_soa(
+        dx2, dy2, dz2, qx2, qy2, alpha=plan.idw_alpha,
+        block_q=plan.block_q, block_d=plan.block_d, interpret=plan.interpret,
+    )
+    alpha = jnp.full((n,), plan.idw_alpha, dtype)
+    return z[:n, 0], alpha, {}
+
+
+def _execute_chunked(plan: InterpolationPlan, qx, qy):
+    dx, dy, dz = plan.data
+    params = plan.params
+    if plan.knn == "grid":
+        r_obs = grid_r_obs(plan.grid, qx, qy, params.k)
+    else:
+        r_obs = brute_r_obs(
+            dx, dy, qx, qy, params.k, q_chunk=plan.q_chunk, d_chunk=plan.d_chunk
+        )
+    alpha = adaptive_alpha(r_obs, plan.m, plan.area, params)
+    zhat = _interpolate_pass2(
+        dx, dy, dz, qx, qy, alpha, params,
+        area=plan.area, q_chunk=plan.q_chunk, d_chunk=plan.d_chunk,
+    )
+    return zhat, alpha, {}
+
+
+def _execute(plan: InterpolationPlan, qx, qy):
+    if plan.impl == "grid":
+        return _execute_grid(plan, qx, qy)
+    if plan.impl == "idw":
+        return _execute_idw(plan, qx, qy)
+    if plan.impl == "chunked":
+        return _execute_chunked(plan, qx, qy)
+    return _execute_dense(plan, qx, qy)
+
+
+@jax.jit
+def execute(plan: InterpolationPlan, qx, qy):
+    """Interpolate one query batch against a prebuilt plan.
+
+    Pure and jit-compatible for every impl (the plan's statics live in the
+    pytree aux data, so they are trace-time constants).  Returns
+    ``(z_hat, alpha)``, shape ``(n,)`` each, in caller query order.
+    """
+    z, a, _ = _execute(plan, qx, qy)
+    return z, a
+
+
+@jax.jit
+def execute_with_stats(plan: InterpolationPlan, qx, qy):
+    """Like :func:`execute` but also returns the impl's diagnostics:
+    ``grid``: ``grid_fallback`` (bool — this batch exceeded the plan's
+    static candidate capacity and took the exact ring-search path) and
+    ``cand_need_max``; ``tiled_v2``: the measured ``merge_fraction``.
+    The dict's *structure* is static per plan, so this jits identically."""
+    return _execute(plan, qx, qy)

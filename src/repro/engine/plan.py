@@ -1,0 +1,294 @@
+"""Plan construction — the eager half of the plan/execute engine.
+
+A plan captures, once per dataset, every decision that would otherwise leak
+data-dependent *shapes* into the hot path:
+
+* padded data layouts (sentinel coordinates, block-multiple widths, the
+  SoA/AoaS transform) for the dense kernel family;
+* the grid impl's **static-shape snapshot**: the :class:`UniformGrid` (with
+  its CSR point arrays), the per-cell ``required_radius`` table, and a fixed
+  candidate capacity chosen from the occupancy histogram — including the
+  per-workload ``block_d`` autotune and the pathological-resolution
+  warn-or-rebuild loop (ROADMAP item);
+* chunk sizes / constant powers for the pure-jnp and IDW paths.
+
+Everything a plan stores is either a static (hashable aux data of the
+pytree, a trace-time constant) or an array child, so ``execute(plan, ...)``
+jits with the plan as an ordinary argument and two same-shape query batches
+against one plan hit the same executable.  Plan construction is eager by
+design for ``impl="grid"`` (capacities are concrete ints); the ``chunked``
+brute path builds traceable plans so the distributed sharded path can plan
+inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import warnings
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aidw import AIDWParams
+from repro.core.grid import (
+    DEFAULT_OCCUPANCY,
+    UniformGrid,
+    build_grid,
+    required_radius_table,
+    static_cell_radius,
+)
+from repro.core.layouts import coord_sentinel, pad_to, soa_to_aoas
+
+Impl = Literal["naive", "tiled", "binned", "fused", "grid", "tiled_v2", "idw", "chunked"]
+Layout = Literal["soa", "aoas"]
+
+_DENSE_IMPLS = ("naive", "tiled", "binned", "fused", "tiled_v2")
+_SOA_ONLY = ("binned", "fused", "grid", "tiled_v2", "idw", "chunked")
+
+# Rebuild threshold: a resolution is "pathological" when some cell needs a
+# safe ring radius beyond this — the signature of a grid too fine for its
+# data (clustered points leave most cells empty, so ``required_radius``
+# explodes in the voids and candidate rectangles approach a full sweep).
+# A well-sized grid sits at r_safe ~ 2-3 (see ``static_cell_radius``).
+_MAX_SAFE_RADIUS = 6
+_MAX_REBUILDS = 3
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class InterpolationPlan:
+    """Everything needed to interpolate any number of query batches.
+
+    Static fields (pytree aux — trace-time constants, part of the jit cache
+    key) vs array children (``data``, ``grid``, ``r_need``) are split so the
+    whole plan passes through ``jax.jit`` as one argument.
+    """
+
+    # --- static ---
+    impl: str
+    layout: str
+    params: AIDWParams
+    area: float
+    m: int                    # real (unpadded) data-point count
+    block_q: int
+    block_d: int              # data-axis tile: dense sweep / grid Phase 2
+    interpret: bool
+    knn: str                  # chunked: "brute" | "grid"
+    q_chunk: int
+    d_chunk: int
+    idw_alpha: float
+    cand_capacity: int        # grid: static candidate-row width (points)
+    cand_block_d: int         # grid: Phase-1 candidate tile (autotuned)
+    grid_rebuilds: int        # grid: coarsening rebuilds during planning
+    # --- children ---
+    data: tuple               # impl-specific padded arrays
+    grid: UniformGrid | None
+    r_need: jnp.ndarray | None  # (gy, gx) int32 per-cell required_radius
+
+    def tree_flatten(self):
+        aux = (self.impl, self.layout, self.params, self.area, self.m,
+               self.block_q, self.block_d, self.interpret, self.knn,
+               self.q_chunk, self.d_chunk, self.idw_alpha,
+               self.cand_capacity, self.cand_block_d, self.grid_rebuilds)
+        return (self.data, self.grid, self.r_need), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, grid, r_need = children
+        return cls(*aux, data=data, grid=grid, r_need=r_need)
+
+
+def _choose_candidate_capacity(grid: UniformGrid, r_need, block_q: int, m: int,
+                               query_occupancy: float | None):
+    """Static candidate capacity (points) from the occupancy histogram.
+
+    A block of ``block_q`` Morton-contiguous queries at ~``query_occupancy``
+    queries per cell spans a home-cell bbox of side about
+    ``2*ceil(sqrt(block_q / query_occupancy))`` (a contiguous Morton run of
+    L cells fits a box of side <= 2*ceil(sqrt(L))); expanding by the
+    grid-max in-cell safe radius bounds the rectangle side ``W``.  The
+    capacity is the densest WxW occupancy window (one integral-image sweep).
+    Query density is unknowable at plan time, so the default assumes serving
+    batches ~4x sparser than the data; blocks that exceed the capacity at
+    execute time (sparser/far-out-of-bbox batches) take the exact
+    ring-search fallback instead of losing neighbours.
+
+    Returns ``(capacity, r_static, window)`` — all concrete ints.
+    """
+    r_cell = static_cell_radius(grid, r_need)
+    r_static = int(jnp.max(r_cell))
+    occ_mean = max(m / max(grid.n_cells, 1), 1.0)
+    if query_occupancy is None:
+        query_occupancy = occ_mean / 4.0
+    query_occupancy = max(query_occupancy, 0.5)
+    side = 2 * math.ceil(math.sqrt(block_q / query_occupancy))
+    window = min(side + 2 * r_static + 1, max(grid.gx, grid.gy))
+    c = grid.cum
+    ys = jnp.minimum(jnp.arange(grid.gy, dtype=jnp.int32) + window, grid.gy)
+    xs = jnp.minimum(jnp.arange(grid.gx, dtype=jnp.int32) + window, grid.gx)
+    y0 = jnp.arange(grid.gy, dtype=jnp.int32)
+    x0 = jnp.arange(grid.gx, dtype=jnp.int32)
+    sums = (c[ys[:, None], xs[None, :]] - c[y0[:, None], xs[None, :]]
+            - c[ys[:, None], x0[None, :]] + c[y0[:, None], x0[None, :]])
+    capacity = int(jnp.max(sums))
+    return max(capacity, 1), r_static, window
+
+
+def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
+               query_occupancy):
+    """Grid-impl plan: snapshot + static capacity + block_d autotune."""
+    m = int(dx.shape[0])
+    dtype = jnp.asarray(dx).dtype
+    user_grid = grid is not None
+    occupancy = target_occupancy or DEFAULT_OCCUPANCY
+    if grid is None:
+        grid = build_grid(dx, dy, dz, target_occupancy=occupancy)
+
+    rebuilds = 0
+    while True:
+        r_need = required_radius_table(grid, params.k)
+        capacity, r_static, window = _choose_candidate_capacity(
+            grid, r_need, block_q, m, query_occupancy
+        )
+        pathological = grid.n_cells > 1 and r_static > _MAX_SAFE_RADIUS
+        if not pathological:
+            break
+        if user_grid or rebuilds >= _MAX_REBUILDS:
+            warnings.warn(
+                f"grid resolution {grid.gx}x{grid.gy} is pathological for this "
+                f"data (grid-max safe radius {r_static}, static candidate "
+                f"window {window} cells); candidate rows approach a full "
+                "sweep. Pass a coarser grid or higher target_occupancy.",
+                stacklevel=3,
+            )
+            break
+        # coarsen: 4x the target occupancy halves the cells per axis,
+        # raising occupancy in sparse regions and shrinking required_radius
+        occupancy *= 4.0
+        grid = build_grid(dx, dy, dz, target_occupancy=occupancy)
+        rebuilds += 1
+
+    # block_d autotune from the occupancy histogram: a candidate tile no
+    # wider than the (128-aligned) capacity — narrow neighbourhoods get a
+    # single tile instead of streaming block_d of sentinel padding
+    capacity = min(capacity, m)
+    cand_block_d = min(block_d, max(128, _round_up(capacity, 128)))
+    cand_capacity = _round_up(capacity, cand_block_d)
+
+    # Phase-2 full-data sweep: sentinel-pad to its own tile multiple
+    bd2 = min(block_d, max(128, _round_up(m, 128)))
+    big = coord_sentinel(dtype)
+    data = (
+        pad_to(jnp.asarray(dx), bd2, big)[None, :],
+        pad_to(jnp.asarray(dy), bd2, big)[None, :],
+        pad_to(jnp.asarray(dz), bd2, jnp.zeros((), dtype))[None, :],
+    )
+    return dict(block_d=bd2, cand_capacity=cand_capacity, cand_block_d=cand_block_d,
+                grid_rebuilds=rebuilds, data=data, grid=grid, r_need=r_need)
+
+
+def build_plan(
+    dx, dy, dz, *,
+    params: AIDWParams = AIDWParams(),
+    area: float | None = None,
+    impl: Impl = "tiled",
+    layout: Layout = "soa",
+    block_q: int = 256,
+    block_d: int = 512,
+    interpret: bool | None = None,
+    grid: UniformGrid | None = None,
+    knn: str = "brute",
+    q_chunk: int = 1024,
+    d_chunk: int = 4096,
+    idw_alpha: float = 2.0,
+    target_occupancy: float | None = None,
+    query_occupancy: float | None = None,
+) -> InterpolationPlan:
+    """Build an :class:`InterpolationPlan` from a dataset + configuration.
+
+    The one place padding/sentinel/layout decisions are made for every impl
+    (the kernels' public wrappers in ``kernels.ops``, the pure-jnp
+    ``aidw_interpolate`` and the distributed sharded path all plan here).
+
+    ``impl``: the dense kernel family ("naive", "tiled", "binned", "fused",
+    "tiled_v2"), the static-shape grid path ("grid"), the pure-jnp chunked
+    path ("chunked", with ``knn`` = "brute" | "grid"), or constant-power
+    "idw".  ``grid=`` supplies a prebuilt :class:`UniformGrid` (reused, never
+    rebuilt); ``target_occupancy`` seeds the auto-resolution otherwise.
+    ``query_occupancy`` (grid impl) sizes the static candidate capacity: the
+    expected queries per cell of a serving batch (default: data occupancy /
+    4).  Lower values buy headroom for sparse batches at the cost of wider
+    candidate rows; batches beyond the capacity stay exact via the
+    ring-search fallback.
+    """
+    valid_impls = _DENSE_IMPLS + ("grid", "idw", "chunked")
+    if impl not in valid_impls:
+        raise ValueError(f"impl must be one of {valid_impls}, got {impl!r}")
+    if layout not in ("soa", "aoas"):
+        raise ValueError(layout)
+    if layout == "aoas" and impl in _SOA_ONLY:
+        raise ValueError(f"impl={impl!r} is SoA-only (not available for layout=aoas)")
+    uses_grid = impl == "grid" or (impl == "chunked" and knn == "grid")
+    if grid is not None and not uses_grid:
+        raise ValueError("grid= is only meaningful with impl='grid' or knn='grid'")
+    if impl == "chunked" and knn not in ("brute", "grid"):
+        raise ValueError(f"knn must be 'brute' or 'grid', got {knn!r}")
+
+    m = int(dx.shape[0])
+    if impl != "idw" and m < params.k:
+        raise ValueError(f"need at least k={params.k} data points, got {m}")
+    if area is None:
+        area = params.area
+    if area is None:
+        if impl != "idw":  # constant-power IDW has no Eq. (2), no area
+            raise ValueError("plans require a static area; pass area= or set params.area")
+        area = 0.0
+    area = float(area)
+    params = dataclasses.replace(params, alpha_levels=tuple(params.alpha_levels))
+    interp = _auto_interpret(interpret)
+    dtype = jnp.asarray(dx).dtype
+
+    fields = dict(
+        impl=impl, layout=layout, params=params, area=area, m=m,
+        block_q=block_q, block_d=block_d, interpret=interp,
+        knn=knn, q_chunk=q_chunk, d_chunk=d_chunk, idw_alpha=float(idw_alpha),
+        cand_capacity=0, cand_block_d=0, grid_rebuilds=0,
+        data=(), grid=None, r_need=None,
+    )
+
+    if impl == "grid":
+        fields.update(_plan_grid(
+            dx, dy, dz, params=params, block_q=block_q, block_d=block_d,
+            grid=grid, target_occupancy=target_occupancy,
+            query_occupancy=query_occupancy,
+        ))
+    elif impl == "chunked":
+        if knn == "grid" and grid is None:
+            grid = build_grid(dx, dy, dz, target_occupancy=target_occupancy or DEFAULT_OCCUPANCY)
+        fields.update(data=(jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz)), grid=grid)
+    else:
+        # dense kernel family + idw: sentinel-pad the streamed data axis
+        if impl == "naive":
+            fields["block_q"] = min(block_q, 64)
+        big = coord_sentinel(dtype)
+        dxp = pad_to(jnp.asarray(dx), block_d, big)
+        dyp = pad_to(jnp.asarray(dy), block_d, big)
+        dzp = pad_to(jnp.asarray(dz), block_d, jnp.zeros((), dtype))
+        if layout == "aoas":
+            fields.update(data=(soa_to_aoas(dxp, dyp, dzp),))
+        else:
+            fields.update(data=(dxp[None, :], dyp[None, :], dzp[None, :]))
+
+    return InterpolationPlan(**fields)

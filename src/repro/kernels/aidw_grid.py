@@ -1,26 +1,31 @@
-"""Grid-accelerated AIDW — Phase 1 streams candidate neighbourhoods only.
+"""Grid-accelerated AIDW — static-shape execute machinery over the plan's
+CSR grid snapshot.
 
-The tiled kernel's Phase 1 (kNN -> adaptive alpha) streams ALL m data points
-past every query block; that brute-force sweep dominates runtime as m grows.
-Here the host bucket-sorts the data points into a :class:`UniformGrid`
-(``repro.core.grid``), sorts the queries into Morton order so each query
-block lives in a compact patch of cells, and gathers one *candidate row* per
-block: the padded points of every cell inside the block's safe rectangle
-(per-query :func:`safe_radius`, maxed over the block, around the bounding
-box of the block's home cells — guaranteed to contain each query's true k
-nearest neighbours by occupancy alone, DESIGN.md §4).
+The PR-1 version of this module materialised per-block *ragged* candidate
+rows eagerly in Python (their width was a measured ``max`` over blocks), so
+``impl="grid"`` could not be traced, vmapped, or donated.  The plan/execute
+engine (``repro.engine``, DESIGN.md §6) fixes the candidate capacity ONCE at
+plan time from the occupancy histogram; everything here is a pure function
+of ``(snapshot arrays, queries, static capacity)`` and runs under ``jax.jit``:
 
-Phase 1 then runs the *same* kernel body as the tiled version
-(``_knn_kernel_soa`` — running k-best merge, alpha via Eq. 2-6), but the
-inner grid dimension walks the block's candidate row instead of the full
-data axis: per-query work drops from O(m) to O(|neighbourhood|), near O(k)
-at the paper's densities.  Phase 2 is unchanged (AIDW weights ALL m points,
-so the full-data sweep is reused verbatim via ``_weight_kernel_soa``) and
-the outputs are unsorted back to caller order.
+* :func:`block_rectangles` — per-block candidate rectangles (cell coords)
+  for Morton-contiguous query blocks, from the per-query safe radii.
+* :func:`gather_candidates_csr` — the traced gather: each rectangle row
+  ``(y, xlo..xhi)`` is one contiguous run of the grid's CSR point arrays, so
+  a block's candidates are ``ht`` contiguous runs decoded into a STATIC
+  ``capacity``-wide row (sentinel-padded).  Returns the true per-block need
+  so the engine can fall back to the exact ring search when the plan-time
+  capacity is exceeded (far out-of-bbox queries, adversarial batches) —
+  the static fast path never silently drops a neighbour.
+* :func:`phase1_alpha_from_candidates` — Phase 1 (kNN → adaptive alpha) over
+  the candidate rows, same kernel body as the tiled version
+  (``_knn_kernel_soa``); per-query work is O(|neighbourhood|) instead of
+  O(m).
+* :func:`phase2_weights_full` — Phase 2 unchanged: AIDW weights ALL m data
+  points, so the full-data sweep (``_weight_kernel_soa``) is reused verbatim.
 
-Host prep is eager-only: candidate-row width is occupancy-dependent
-(``max`` over blocks), so ``impl="grid"`` cannot be called under an outer
-``jit`` — build once, interpolate many.
+Morton sorting, padding, the overflow cond and the unsort live in
+``repro.engine.execute``; this module is only the kernel plumbing.
 """
 
 from __future__ import annotations
@@ -33,35 +38,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.aidw import AIDWParams
-from repro.core.grid import (
-    UniformGrid,
-    build_grid,
-    cell_of,
-    coord_sentinel,
-    morton_ids,
-    safe_radius,
-)
+from repro.core.grid import UniformGrid
 from repro.kernels.aidw_tiled import _SEMANTICS, _knn_kernel_soa, _weight_kernel_soa
 
 
-def _pad_tail(x, n_pad):
-    """Pad a 1-D array by repeating its last element (keeps per-block cell
-    rectangles unchanged — a repeated query adds no new candidate cells)."""
-    if n_pad == 0:
-        return x
-    return jnp.concatenate([x, jnp.broadcast_to(x[-1], (n_pad,))])
-
-
-def gather_block_candidates(grid: UniformGrid, cx, cy, r_safe, block_q: int):
-    """Per-block candidate rows for Morton-contiguous query blocks.
+def block_rectangles(grid: UniformGrid, cx, cy, r_safe, block_q: int):
+    """Candidate rectangles for Morton-contiguous query blocks.
 
     Args:
       cx, cy: (n_sorted,) clamped home cells, ``n_sorted % block_q == 0``.
-      r_safe: (n_sorted,) per-query safe ring radii.
+      r_safe: (n_sorted,) per-query containment-safe ring radii.
 
-    Returns ``(cand_x, cand_y)`` of shape ``(nb, C)`` where ``C`` is the
-    batch-max rectangle size in points (eager value); masked / out-of-rect
-    slots hold the +inf-overflow sentinel.
+    Returns ``(xlo, xhi, ylo, yhi)`` of shape ``(nb,)`` each — the inclusive
+    cell bounds of every block's rectangle: the bounding box of the block's
+    home cells expanded by the block-max safe radius, clipped to the grid.
     """
     nb = cx.shape[0] // block_q
     cxb = cx.reshape(nb, block_q)
@@ -71,88 +61,99 @@ def gather_block_candidates(grid: UniformGrid, cx, cy, r_safe, block_q: int):
     xhi = jnp.clip(cxb.max(axis=1) + rb, 0, grid.gx - 1)
     ylo = jnp.clip(cyb.min(axis=1) - rb, 0, grid.gy - 1)
     yhi = jnp.clip(cyb.max(axis=1) + rb, 0, grid.gy - 1)
-    wd = xhi - xlo + 1
-    ht = yhi - ylo + 1
-    c_cells = int(jnp.max(wd * ht))  # eager: fixes the candidate-row width
-
-    j = jnp.arange(c_cells, dtype=jnp.int32)[None, :]
-    jx = j % wd[:, None]
-    jy = j // wd[:, None]
-    valid = jy < ht[:, None]
-    ccx = xlo[:, None] + jx
-    ccy = ylo[:, None] + jy
-    cid = jnp.where(valid, ccy * grid.gx + ccx, grid.n_cells)  # sentinel row
-    cand_x = grid.cell_x[cid].reshape(nb, c_cells * grid.cap)
-    cand_y = grid.cell_y[cid].reshape(nb, c_cells * grid.cap)
-    return cand_x, cand_y
+    return xlo, xhi, ylo, yhi
 
 
-def aidw_grid_soa(
-    dx, dy, dz, qx, qy, *,
-    params: AIDWParams, area: float, m_real: int,
-    grid: UniformGrid | None = None,
-    block_q: int = 256, block_d: int = 512, interpret: bool = False,
-):
-    """Two-phase grid AIDW.  Raw 1-D unpadded inputs; returns
-    ``(z_hat, alpha)``, shape ``(n,)`` each, in caller query order.
+def gather_candidates_csr(grid: UniformGrid, xlo, xhi, ylo, yhi, capacity: int):
+    """Traced per-block candidate gather from the CSR snapshot, static width.
 
-    ``grid`` may be prebuilt (reuse across query batches); otherwise one is
-    built from the data points at the default occupancy.
+    Each rectangle row ``(y, xlo..xhi)`` maps to the contiguous CSR run
+    ``pt_*[starts[y*gx + xlo] : starts[y*gx + xhi + 1]]``.  Slot ``s`` of a
+    block's row indexes the concatenation of those runs: a batched
+    ``searchsorted`` over the per-row prefix sums decodes ``s`` into
+    ``(row, offset-within-row)``.  Slots past the block's true candidate
+    count — and every slot past ``capacity`` when the block overflows — read
+    the CSR sentinel (index ``m``), whose squared distance overflows to +inf.
+
+    Returns ``(cand_x, cand_y, need)``: candidates ``(nb, capacity)`` and the
+    true per-block candidate count ``need (nb,)``.  ``need > capacity`` means
+    this gather is incomplete and the caller must use the exact fallback.
     """
-    n = qx.shape[0]
-    dtype = qx.dtype
-    k = params.k
-    if grid is None:
-        grid = build_grid(dx, dy, dz)
+    nb = xlo.shape[0]
+    gx, gy = grid.gx, grid.gy
+    rows = jnp.arange(gy, dtype=jnp.int32)[None, :]                 # (1, gy)
+    ht = yhi - ylo + 1
+    y = ylo[:, None] + rows                                          # (nb, gy)
+    row_ok = rows < ht[:, None]
+    ysafe = jnp.minimum(y, gy - 1)
+    c = grid.cum
+    x0 = xlo[:, None]
+    x1 = xhi[:, None] + 1
+    cnt = c[ysafe + 1, x1] - c[ysafe + 1, x0] - c[ysafe, x1] + c[ysafe, x0]
+    cnt = jnp.where(row_ok, cnt, 0)
+    offs = jnp.concatenate([jnp.zeros((nb, 1), jnp.int32), jnp.cumsum(cnt, axis=1)], axis=1)
+    need = offs[:, -1]
 
-    # ---- host prep (eager): Morton-sort queries, gather candidate rows ----
-    cx, cy = cell_of(grid, qx, qy)
-    order = jnp.argsort(morton_ids(cx, cy), stable=True)
-    n_pad = (-n) % block_q
-    qx_s = _pad_tail(qx[order], n_pad)
-    qy_s = _pad_tail(qy[order], n_pad)
-    cx_s, cy_s, r_safe = safe_radius(grid, qx_s, qy_s, k)
-    cand_x, cand_y = gather_block_candidates(grid, cx_s, cy_s, r_safe, block_q)
+    s = jnp.broadcast_to(jnp.arange(capacity, dtype=jnp.int32)[None, :], (nb, capacity))
+    row = jax.vmap(functools.partial(jnp.searchsorted, side="right"))(offs, s) - 1
+    row = jnp.clip(row, 0, gy - 1)
+    within = s - jnp.take_along_axis(offs, row, axis=1)
+    base_cid = (ylo[:, None] + row) * gx + x0
+    idx = grid.starts[jnp.clip(base_cid, 0, grid.n_cells)] + within
+    m = grid.n_points
+    valid = s < jnp.minimum(need, capacity)[:, None]
+    idx = jnp.where(valid, jnp.clip(idx, 0, m - 1), m)               # m = sentinel slot
+    return grid.pt_x[idx], grid.pt_y[idx], need
 
-    nb, c_width = cand_x.shape
-    n_tot = nb * block_q
-    bd = min(block_d, max(((c_width + 127) // 128) * 128, 128))
-    c_pad = (-c_width) % bd
-    if c_pad:
-        big = coord_sentinel(dtype)
-        pad = jnp.full((nb, c_pad), big, dtype)
-        cand_x = jnp.concatenate([cand_x, pad], axis=1)
-        cand_y = jnp.concatenate([cand_y, pad], axis=1)
-    c_tot = c_width + c_pad
 
-    # ---- phase 1: kNN/alpha over candidate rows (same body as tiled) ----
-    qx2 = qx_s[:, None]
-    qy2 = qy_s[:, None]
+def phase1_alpha_from_candidates(
+    qx_s, qy_s, cand_x, cand_y, *,
+    params: AIDWParams, area: float, m_real: int,
+    block_q: int, block_d: int, interpret: bool,
+):
+    """Phase 1 over per-block candidate rows (same body as the tiled kernel).
+
+    qx_s/qy_s: (n_tot,) Morton-sorted padded queries, ``n_tot % block_q == 0``;
+    cand_x/cand_y: (nb, c_tot) with ``c_tot % block_d == 0``.
+    Returns alpha, shape ``(n_tot, 1)``.
+    """
+    n_tot = qx_s.shape[0]
+    nb, c_tot = cand_x.shape
+    dtype = qx_s.dtype
+    qx2, qy2 = qx_s[:, None], qy_s[:, None]
     q_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
-    c_spec = pl.BlockSpec((1, bd), lambda i, j: (i, j))
+    c_spec = pl.BlockSpec((1, block_d), lambda i, j: (i, j))
     o_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
-    alpha = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_knn_kernel_soa, m_real=m_real, area=area, params=params),
-        grid=(nb, c_tot // bd),
+        grid=(nb, c_tot // block_d),
         in_specs=[q_spec, q_spec, c_spec, c_spec],
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((n_tot, 1), dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, k), dtype)],
+        scratch_shapes=[pltpu.VMEM((block_q, params.k), dtype)],
         compiler_params=_SEMANTICS,
         interpret=interpret,
     )(qx2, qy2, cand_x, cand_y)
 
-    # ---- phase 2: full-data weighted sweep (AIDW weights all m points) ----
-    big = coord_sentinel(dtype)
-    m_pad = (-m_real) % bd
-    dxp = jnp.concatenate([dx, jnp.full((m_pad,), big, dtype)])[None, :]
-    dyp = jnp.concatenate([dy, jnp.full((m_pad,), big, dtype)])[None, :]
-    dzp = jnp.concatenate([dz, jnp.zeros((m_pad,), dtype)])[None, :]
-    grid2 = (nb, dxp.shape[1] // bd)
-    d_spec = pl.BlockSpec((1, bd), lambda i, j: (0, j))
-    zhat = pl.pallas_call(
-        functools.partial(_weight_kernel_soa, eps=params.exact_hit_eps),
-        grid=grid2,
+
+def phase2_weights_full(
+    qx_s, qy_s, alpha, dxp, dyp, dzp, *,
+    eps: float, block_q: int, block_d: int, interpret: bool,
+):
+    """Phase 2: full-data weighted sweep (AIDW weights ALL m points).
+
+    dxp/dyp/dzp: (1, mp) sentinel-padded data, ``mp % block_d == 0``.
+    Returns z_hat, shape ``(n_tot, 1)``.
+    """
+    n_tot = qx_s.shape[0]
+    dtype = qx_s.dtype
+    qx2, qy2 = qx_s[:, None], qy_s[:, None]
+    q_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+    d_spec = pl.BlockSpec((1, block_d), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_weight_kernel_soa, eps=eps),
+        grid=(n_tot // block_q, dxp.shape[1] // block_d),
         in_specs=[q_spec, q_spec, q_spec, d_spec, d_spec, d_spec],
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((n_tot, 1), dtype),
@@ -160,7 +161,3 @@ def aidw_grid_soa(
         compiler_params=_SEMANTICS,
         interpret=interpret,
     )(qx2, qy2, alpha * 0.5, dxp, dyp, dzp)
-
-    # ---- unsort back to caller order ----
-    inv = jnp.argsort(order)
-    return zhat[:n, 0][inv], alpha[:n, 0][inv]

@@ -1,48 +1,27 @@
-"""Public, jit-compatible entry points for the AIDW/IDW Pallas kernels.
+"""Public entry points for the AIDW/IDW Pallas kernels.
 
-Handles: padding to block multiples (+inf sentinel data points carry zero
-weight and never enter the k-best set), SoA/AoaS layout dispatch, orientation
-reshapes, interpret-mode autodetection (interpret=True off-TPU so the same
-call sites validate on CPU and deploy on TPU), and the paper's static
-parameters (area A, m, k, alpha levels) baked in at trace time.
+Since the plan/execute refactor (DESIGN.md §6) these are thin conveniences
+over ``repro.engine``: each call builds an :class:`InterpolationPlan`
+(padding, sentinel data points, SoA/AoaS layout, interpret-mode
+autodetection, the grid snapshot — all captured once, in one place) and
+runs the jitted ``execute`` step.  Callers that interpolate more than one
+query batch against the same dataset should hold the plan themselves:
+
+    from repro.engine import build_plan, execute
+    plan = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid")
+    z, a = execute(plan, qx, qy)          # compile once
+    z2, a2 = execute(plan, qx2, qy2)      # cache hit
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Literal
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.aidw import AIDWParams
-from repro.core.layouts import soa_to_aoas
-from repro.kernels.aidw_fused import aidw_fused_soa
-from repro.kernels.aidw_naive import aidw_naive_aoas, aidw_naive_soa
-from repro.kernels.aidw_tiled import aidw_tiled_aoas, aidw_tiled_soa
-from repro.kernels.idw_tiled import idw_tiled_soa
 
-Impl = Literal["naive", "tiled", "fused", "binned", "grid"]
+Impl = Literal["naive", "tiled", "fused", "binned", "grid", "tiled_v2"]
 Layout = Literal["soa", "aoas"]
-
-
-def _auto_interpret(interpret: bool | None) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to(x, mult, value):
-    pad = (-x.shape[0]) % mult
-    if pad == 0:
-        return x
-    return jnp.concatenate([x, jnp.full((pad,), value, x.dtype)])
-
-
-def _sentinel(dtype):
-    # large-but-finite coordinate: squared distance overflows to +inf in the
-    # kernel, giving weight exp(-a*inf)=0 and never entering the k-best set.
-    return jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
 
 
 def aidw(
@@ -61,111 +40,27 @@ def aidw(
 
     ``impl``: "naive" (paper, no VMEM tiling), "tiled" (paper, shared-memory
     analogue), "binned" (approximate prefilter), "fused" (beyond-paper
-    single-launch two-phase; SoA only), "grid" (spatial-partition Phase 1 —
-    eager-only dispatch, see ``kernels.aidw_grid``; ``grid=`` accepts a
-    prebuilt ``repro.core.grid.UniformGrid`` for reuse across query sets).
+    single-launch two-phase; SoA only), "grid" (static-shape spatial-partition
+    Phase 1 — jit-compatible since the plan/execute refactor; ``grid=``
+    accepts a prebuilt ``repro.core.grid.UniformGrid``), "tiled_v2"
+    (threshold-skip kNN pass; use ``repro.engine.execute_with_stats`` for its
+    merge-fraction diagnostic).
     ``layout``: "soa" | "aoas" — layout of the streamed data-point array.
     """
-    if impl == "grid":
-        from repro.kernels.aidw_grid import aidw_grid_soa
+    from repro.engine import build_plan, execute  # lazy: kernels <-> engine
 
-        if layout != "soa":
-            raise ValueError("impl='grid' is SoA-only")
-        m = dx.shape[0]
-        if m < params.k:
-            raise ValueError(f"need at least k={params.k} data points, got {m}")
-        return aidw_grid_soa(
-            dx, dy, dz, qx, qy,
-            params=params, area=float(area), m_real=m, grid=grid,
-            block_q=block_q, block_d=block_d, interpret=_auto_interpret(interpret),
-        )
-    if grid is not None:
-        raise ValueError("grid= is only meaningful with impl='grid'")
-    return _aidw_dense(
-        dx, dy, dz, qx, qy,
+    if impl not in ("naive", "tiled", "fused", "binned", "grid", "tiled_v2"):
+        # the engine also plans "idw"/"chunked"; those have their own entry
+        # points (idw(), aidw_interpolate()) with different semantics
+        raise ValueError(impl)
+    plan = build_plan(
+        dx, dy, dz,
         params=params, area=area, impl=impl, layout=layout,
-        block_q=block_q, block_d=block_d, interpret=interpret,
+        block_q=block_q, block_d=block_d, interpret=interpret, grid=grid,
     )
+    return execute(plan, qx, qy)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "area", "impl", "layout", "block_q", "block_d", "interpret"),
-)
-def _aidw_dense(
-    dx, dy, dz, qx, qy,
-    *,
-    params: AIDWParams,
-    area: float,
-    impl: Impl,
-    layout: Layout,
-    block_q: int,
-    block_d: int,
-    interpret: bool | None,
-):
-    """The dense (full-sweep) kernel family behind :func:`aidw` — jitted;
-    ``impl='grid'`` is dispatched eagerly above (its candidate shapes are
-    occupancy-dependent and cannot be fixed under trace)."""
-    interp = _auto_interpret(interpret)
-    m, n = dx.shape[0], qx.shape[0]
-    if m < params.k:
-        raise ValueError(f"need at least k={params.k} data points, got {m}")
-    dtype = qx.dtype
-    big = _sentinel(dtype)
-
-    if impl == "naive":
-        block_q = min(block_q, 64)
-
-    dxp = _pad_to(dx, block_d, big)
-    dyp = _pad_to(dy, block_d, big)
-    dzp = _pad_to(dz, block_d, jnp.zeros((), dtype))
-    qxp = _pad_to(qx, block_q, jnp.zeros((), dtype))
-    qyp = _pad_to(qy, block_q, jnp.zeros((), dtype))
-    kw = dict(params=params, area=float(area), m_real=m, interpret=interp)
-
-    if layout == "soa":
-        dx2, dy2, dz2 = dxp[None, :], dyp[None, :], dzp[None, :]
-        qx2, qy2 = qxp[:, None], qyp[:, None]
-        if impl == "naive":
-            z, a = aidw_naive_soa(dx2, dy2, dz2, qx2, qy2, block_q=block_q, **kw)
-        elif impl == "tiled":
-            z, a = aidw_tiled_soa(dx2, dy2, dz2, qx2, qy2, block_q=block_q, block_d=block_d, **kw)
-        elif impl == "binned":
-            # nbins: power-of-two divisor of block_d near 6k — keeps the
-            # same-bin collision probability (the only error source) ~1% per
-            # query on shuffled data; merge cost 3k(k+nbins)/block_d ~ 4
-            # flop/pair vs 3k ~ 30 exact.
-            nbins = 16
-            while nbins * 2 <= min(6 * params.k, block_d // 4):
-                nbins *= 2
-            z, a = aidw_tiled_soa(
-                dx2, dy2, dz2, qx2, qy2, block_q=block_q, block_d=block_d,
-                nbins=nbins, **kw,
-            )
-        elif impl == "fused":
-            z, a = aidw_fused_soa(dx2, dy2, dz2, qx2, qy2, block_q=block_q, block_d=block_d, **kw)
-        else:
-            raise ValueError(impl)
-        return z[:n, 0], a[:n, 0]
-
-    if layout == "aoas":
-        data = soa_to_aoas(dxp, dyp, dzp)
-        qx2, qy2 = qxp[None, :], qyp[None, :]
-        if impl == "naive":
-            z, a = aidw_naive_aoas(data, qx2, qy2, block_q=block_q, **kw)
-        elif impl == "tiled":
-            z, a = aidw_tiled_aoas(data, qx2, qy2, block_q=block_q, block_d=block_d, **kw)
-        else:
-            raise ValueError(f"impl={impl} not available for layout=aoas (fused is SoA-only)")
-        return z[0, :n], a[0, :n]
-
-    raise ValueError(layout)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "area", "block_q", "block_d", "interpret"),
-)
 def aidw_v2(
     dx, dy, dz, qx, qy,
     *,
@@ -175,34 +70,31 @@ def aidw_v2(
     block_d: int = 512,
     interpret: bool | None = None,
 ):
-    """Threshold-skip AIDW (beyond-paper hillclimb, SoA).  Returns
-    ``(z_hat, alpha, merge_fraction)`` — merge_fraction is the measured share
-    of (query-block x data-tile) steps that actually ran the k-best merge."""
-    from repro.kernels.aidw_tiled_v2 import aidw_tiled_v2_soa
+    """Deprecated standalone entry for the threshold-skip kernel; use
+    ``aidw(..., impl="tiled_v2")`` (or the engine directly, which exposes the
+    merge-fraction diagnostic via ``execute_with_stats``).
 
-    interp = _auto_interpret(interpret)
-    m, n = dx.shape[0], qx.shape[0]
-    if m < params.k:
-        raise ValueError(f"need at least k={params.k} data points, got {m}")
-    dtype = qx.dtype
-    big = _sentinel(dtype)
-    dxp = _pad_to(dx, block_d, big)[None, :]
-    dyp = _pad_to(dy, block_d, big)[None, :]
-    dzp = _pad_to(dz, block_d, jnp.zeros((), dtype))[None, :]
-    qxp = _pad_to(qx, block_q, jnp.zeros((), dtype))[:, None]
-    qyp = _pad_to(qy, block_q, jnp.zeros((), dtype))[:, None]
-    z, a, merges = aidw_tiled_v2_soa(
-        dxp, dyp, dzp, qxp, qyp, params=params, area=float(area), m_real=m,
-        block_q=block_q, block_d=block_d, interpret=interp,
+    Returns ``(z_hat, alpha, merge_fraction)`` — merge_fraction is the
+    measured share of (query-block x data-tile) steps that actually ran the
+    k-best merge.
+    """
+    warnings.warn(
+        "aidw_v2 is deprecated; use aidw(..., impl='tiled_v2') or "
+        "repro.engine.execute_with_stats for the merge-fraction diagnostic",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    n_tiles = dxp.shape[1] // block_d
-    frac = jnp.sum(merges).astype(jnp.float32) / (merges.shape[0] * n_tiles)
-    return z[:n, 0], a[:n, 0], frac
+    from repro.engine import build_plan, execute_with_stats  # lazy: kernels <-> engine
+
+    plan = build_plan(
+        dx, dy, dz,
+        params=params, area=area, impl="tiled_v2",
+        block_q=block_q, block_d=block_d, interpret=interpret,
+    )
+    z, a, stats = execute_with_stats(plan, qx, qy)
+    return z, a, stats["merge_fraction"]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("alpha", "block_q", "block_d", "interpret")
-)
 def idw(
     dx, dy, dz, qx, qy,
     *,
@@ -212,16 +104,12 @@ def idw(
     interpret: bool | None = None,
 ):
     """Standard IDW via the tiled Pallas kernel (SoA). Returns z_hat (n,)."""
-    interp = _auto_interpret(interpret)
-    n = qx.shape[0]
-    dtype = qx.dtype
-    big = _sentinel(dtype)
-    dxp = _pad_to(dx, block_d, big)[None, :]
-    dyp = _pad_to(dy, block_d, big)[None, :]
-    dzp = _pad_to(dz, block_d, jnp.zeros((), dtype))[None, :]
-    qxp = _pad_to(qx, block_q, jnp.zeros((), dtype))[:, None]
-    qyp = _pad_to(qy, block_q, jnp.zeros((), dtype))[:, None]
-    z = idw_tiled_soa(
-        dxp, dyp, dzp, qxp, qyp, alpha=alpha, block_q=block_q, block_d=block_d, interpret=interp
+    from repro.engine import build_plan, execute  # lazy: kernels <-> engine
+
+    plan = build_plan(
+        dx, dy, dz,
+        impl="idw", idw_alpha=alpha,
+        block_q=block_q, block_d=block_d, interpret=interpret,
     )
-    return z[:n, 0]
+    z, _ = execute(plan, qx, qy)
+    return z

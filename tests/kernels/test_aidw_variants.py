@@ -26,7 +26,8 @@ def _setup(m, n=512, seed=1):
 @pytest.mark.parametrize("m", [1000, 4096])
 def test_threshold_skip_exact(m):
     dx, dy, dz, qx, qy, p, z_ref, a_ref = _setup(m)
-    z, a, frac = aidw_v2(dx, dy, dz, qx, qy, params=p, area=1.0, block_q=64, block_d=128)
+    with pytest.warns(DeprecationWarning):  # standalone entry point deprecated
+        z, a, frac = aidw_v2(dx, dy, dz, qx, qy, params=p, area=1.0, block_q=64, block_d=128)
     np.testing.assert_allclose(np.asarray(z), z_ref, rtol=2e-4, atol=2e-5)
     np.testing.assert_allclose(np.asarray(a), a_ref, rtol=2e-4, atol=2e-5)
     assert 0.0 < float(frac) <= 1.0
@@ -37,7 +38,8 @@ def test_threshold_skip_merge_fraction_refutation():
     a candidate for SOME query in the block, so the skip never fires —
     merge fraction stays ~1.  (Kept as a regression guard on the analysis.)"""
     dx, dy, dz, qx, qy, p, _, _ = _setup(16384, n=1024)
-    _, _, frac = aidw_v2(dx, dy, dz, qx, qy, params=p, area=1.0, block_q=256, block_d=512)
+    with pytest.warns(DeprecationWarning):  # standalone entry point deprecated
+        _, _, frac = aidw_v2(dx, dy, dz, qx, qy, params=p, area=1.0, block_q=256, block_d=512)
     assert float(frac) > 0.95
 
 
