@@ -236,7 +236,8 @@ def grid_plan_reuse(quick=False, smoke=False, json_path=None):
     _row("plan", f"steady_batch_{nq}q", f"{t_steady*1e3:.0f}ms", "jit cache hit")
     _row("plan", "reuse_speedup", f"{ratio:.1f}x", "(build+first)/steady")
     _row("plan", "autotuned_block_d", str(plan.cand_block_d),
-         f"cand_capacity={plan.cand_capacity} fallback={bool(stats['grid_fallback'])}")
+         f"cand_capacity={plan.cand_capacity} "
+         f"overflow_queries={int(stats['overflow_queries'])}")
     _row("plan", "parity_max_abs_err", f"{max(err_jit, err_eager):.2e}", "eager+jit vs oracle")
 
     if write_json:
@@ -251,7 +252,9 @@ def grid_plan_reuse(quick=False, smoke=False, json_path=None):
             "autotuned_block_d": plan.cand_block_d,
             "cand_capacity": plan.cand_capacity,
             "grid_rebuilds": plan.grid_rebuilds,
-            "fallback_used": bool(stats["grid_fallback"]),
+            # PR-4 blend: per-query diagnostic replaces the old whole-batch
+            # fallback_used flag (grid_fallback now means ALL queries overflowed)
+            "overflow_queries": int(stats["overflow_queries"]),
             "build_ms": round(t_build * 1e3, 1),
             "first_batch_ms_incl_compile": round(t_first * 1e3, 1),
             "steady_batch_ms": round(t_steady * 1e3, 1),
@@ -320,6 +323,149 @@ def grid_phase1(quick=False, smoke=False, json_path=None):
         _row("grid", "json", json_path)
 
 
+def grid_blend(quick=False, smoke=False, json_path=None):
+    """Sparsity-skipping Phase 1 + per-block overflow blend (--only blend).
+
+    Three serving-shaped scenarios against the grid plan, each parity-checked
+    (eager AND jitted execute vs the exact chunked ring-search oracle):
+
+      uniform   — full-bbox batch on uniform data: prefetch-skip vs dense
+                  Phase-1 pipelines (same gather, same kernel body; the skip
+                  pipeline clamps each block to its own non-sentinel tiles).
+      clustered — tile-local sparse batch on clustered data: the skip
+                  fraction is highest here (most blocks need few tiles).
+      seam      — mostly tile-local batch plus a small full-diagonal slice
+                  (straddles Morton seams, leaves the bbox, crosses empty
+                  regions): a couple of blocks overflow the static capacity.
+                  PR-2's whole-batch ``lax.cond`` would ring-search ALL nq
+                  queries (``ring_full_ms`` is a *lower bound* on its batch
+                  latency — Phase 2 comes on top); the blend ring-searches
+                  only the overflowed ones (``ring_masked_ms``) and keeps
+                  the kernel result everywhere else, so ``blend_exec_ms``
+                  (the full batch, Phase 2 included) undercuts it.
+
+    CPU-interpret caveat (recorded in the json): Pallas kernels here run in
+    interpret mode, which makes kernel arms look *slower* relative to the
+    pure-jnp ring search than they are on TPU — the blend/skip wins below
+    are therefore conservative for the compiled target.
+    """
+    from repro.core.grid import grid_r_obs as _ring
+    from repro.engine import build_plan, execute, execute_with_stats
+    from repro.engine.execute import _execute
+
+    p = AIDWParams(k=10, area=1.0)
+    m = 2048 if smoke else (4 * K if quick else 20 * K)
+    nq = 256 if smoke else 4096
+    k = p.k
+    write_json = json_path and not (smoke or quick)
+    rng = np.random.default_rng(3)
+    results = {}
+
+    def timed(f):
+        return time_fn(f, warmup=1, repeats=1)  # 1 warm (compile) + 1 timed eval
+
+    def parity(plan, qx, qy, dx, dy, dz, tag):
+        # eager + jitted execute vs the exact chunked ring-search oracle
+        z_jit, a_jit = execute(plan, qx, qy)
+        z_e, a_e, _ = _execute(plan, qx, qy)
+        z_ref, a_ref = aidw_interpolate(dx, dy, dz, qx, qy, p, area=1.0,
+                                        knn="grid", grid=plan.grid)
+        err = max(float(jnp.max(jnp.abs(z_jit - z_ref))), float(jnp.max(jnp.abs(z_e - z_ref))),
+                  float(jnp.max(jnp.abs(a_jit - a_ref))), float(jnp.max(jnp.abs(a_e - a_ref))))
+        assert err < 1e-3, (tag, err)
+        return err
+
+    # ---- uniform + clustered: dense vs prefetch-skip pipelines
+    for dist, gen in (("uniform", uniform_points), ("clustered", clustered_points)):
+        dxn, dyn, dzn = gen(m, seed=0)
+        dx, dy, dz = map(jnp.asarray, (dxn, dyn, dzn))
+        if dist == "uniform":
+            qn = uniform_points(nq, seed=1)
+            qx, qy = jnp.asarray(qn[0]), jnp.asarray(qn[1])
+        else:  # tile-local sparse batch near the data clusters
+            pick = rng.integers(0, m, nq)
+            qq = (np.stack([dxn, dyn], 1)[pick] + rng.normal(0, 0.01, (nq, 2))).astype(np.float32)
+            qx, qy = jnp.asarray(qq[:, 0]), jnp.asarray(qq[:, 1])
+        plans = {pipe: build_plan(dx, dy, dz, params=p, area=1.0, impl="grid", pipeline=pipe)
+                 for pipe in ("prefetch", "dense")}
+        err = parity(plans["prefetch"], qx, qy, dx, dy, dz, dist)
+        _, _, stats = execute_with_stats(plans["prefetch"], qx, qy)
+        t_pre = timed(lambda: execute(plans["prefetch"], qx, qy))
+        t_den = timed(lambda: execute(plans["dense"], qx, qy))
+        skip = float(stats["skipped_tile_fraction"])
+        _row("blend", f"{dist}_dense_exec", f"{t_den*1e3:.0f}ms", f"m={m} nq={nq}")
+        _row("blend", f"{dist}_prefetch_exec", f"{t_pre*1e3:.0f}ms",
+             f"skipped_tile_fraction={skip:.2f}")
+        _row("blend", f"{dist}_skip_speedup", f"{t_den/t_pre:.2f}x", f"parity_err={err:.1e}")
+        results[dist] = {
+            "dense_exec_ms": round(t_den * 1e3, 1),
+            "prefetch_exec_ms": round(t_pre * 1e3, 1),
+            "skipped_tile_fraction": round(skip, 3),
+            "overflow_queries": int(stats["overflow_queries"]),
+            "parity_max_abs_err": err,
+        }
+
+    # ---- seam: the overflow worst case, cond-fallback vs per-block blend
+    dxn, dyn, dzn = clustered_points(m, seed=0)
+    dx, dy, dz = map(jnp.asarray, (dxn, dyn, dzn))
+    n_far = max(nq // 16, 16)
+    pick = rng.integers(0, m, nq - n_far)
+    near = (np.stack([dxn, dyn], 1)[pick] + rng.normal(0, 0.01, (nq - n_far, 2))).astype(np.float32)
+    t = np.linspace(-0.2, 1.2, n_far).astype(np.float32)
+    q = np.concatenate([near, np.stack([t, t], 1)])
+    rng.shuffle(q)
+    qx, qy = jnp.asarray(q[:, 0]), jnp.asarray(q[:, 1])
+    plan = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid")
+    plan0 = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid", seam_level=0)
+    err = parity(plan, qx, qy, dx, dy, dz, "seam")
+    _, _, stats = execute_with_stats(plan, qx, qy)
+    _, _, stats0 = execute_with_stats(plan0, qx, qy)
+    mask = stats["overflow_query_mask"]
+    t_blend = timed(lambda: execute(plan, qx, qy))
+    t_full = timed(lambda: _ring(plan.grid, qx, qy, k))
+    t_masked = timed(lambda: _ring(plan.grid, qx, qy, k, mask))
+    ovf = int(stats["overflow_queries"])
+    _row("blend", "seam_overflow_queries", str(ovf),
+         f"of {nq}; seam_level={plan.seam_level} (vs {int(stats0['overflow_queries'])} unsplit)")
+    _row("blend", "seam_blend_exec", f"{t_blend*1e3:.0f}ms", "full batch incl. Phase 2")
+    _row("blend", "seam_ring_full", f"{t_full*1e3:.0f}ms",
+         "PR-2 cond arm: ring search for ALL queries (lower bound, no Phase 2)")
+    _row("blend", "seam_ring_masked", f"{t_masked*1e3:.0f}ms", "blend arm: overflowed queries only")
+    _row("blend", "seam_worst_case_speedup", f"{t_full/t_blend:.1f}x",
+         "whole-batch ring arm vs full blended batch"
+         + ("" if t_blend < t_full else " [WARNING: blend did not undercut it]"))
+    results["seam"] = {
+        "overflow_queries": ovf,
+        "overflow_blocks": int(stats["overflow_blocks"]),
+        "overflow_queries_seam_level_0": int(stats0["overflow_queries"]),
+        "seam_level": plan.seam_level,
+        "blend_exec_ms": round(t_blend * 1e3, 1),
+        "ring_full_ms_pr2_lower_bound": round(t_full * 1e3, 1),
+        "ring_masked_ms": round(t_masked * 1e3, 1),
+        "skipped_tile_fraction": round(float(stats["skipped_tile_fraction"]), 3),
+        "parity_max_abs_err": err,
+    }
+
+    if write_json:
+        os.makedirs(os.path.dirname(json_path), exist_ok=True)
+        blob = {
+            "backend": jax.default_backend(),
+            "mode": "Pallas kernels in interpret mode on CPU (kernel arms are "
+                    "emulated — slower relative to the pure-jnp ring search than "
+                    "on TPU, so blend/skip speedups are conservative)",
+            "m": m, "nq": nq, "k": k,
+            "scenarios": results,
+            "protocol": "jitted execute, steady state (1 warm + 1 timed eval); "
+                        "ring_full is PR-2's whole-batch lax.cond exact arm (its "
+                        "batch latency lower bound); blend_exec is the shipped "
+                        "path end to end; dense vs prefetch differ only in the "
+                        "Phase-1 pipeline (same gather, same kernel body).",
+        }
+        with open(json_path, "w") as f:
+            json.dump(blob, f, indent=2)
+        _row("blend", "json", json_path)
+
+
 def lm_rooflines(quick=False):
     """Roofline summary from the dry-run artifacts (EXPERIMENTS §Roofline)."""
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -368,6 +514,7 @@ def main() -> None:
     if args.smoke:
         args.quick = True
     grid_json = os.path.join(os.path.dirname(__file__), "results", "grid_knn.json")
+    blend_json = os.path.join(os.path.dirname(__file__), "results", "grid_blend.json")
     tables = {
         "table1": table1_execution_time,
         "fig4": fig4_speedups,
@@ -376,6 +523,7 @@ def main() -> None:
         "fig7": fig7_tiled_vs_naive,
         "grid": functools.partial(grid_phase1, smoke=args.smoke, json_path=grid_json),
         "plan": functools.partial(grid_plan_reuse, smoke=args.smoke, json_path=grid_json),
+        "blend": functools.partial(grid_blend, smoke=args.smoke, json_path=blend_json),
         "lm": lm_rooflines,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core.aidw import AIDWParams
 from repro.data.spatial import clustered_points, uniform_points
-from repro.engine import build_plan, execute
+from repro.engine import build_plan, execute, execute_with_stats
 from repro.kernels import aidw, idw
 
 
@@ -42,6 +42,30 @@ def main():
     z_batch1, _ = execute(plan, qx, qy)                     # compiles once
     qx2, qy2, _ = uniform_points(2048, seed=3)
     z_batch2, _ = execute(plan, qx2, qy2)                   # jit cache hit
+
+    # When does the fast path degrade?  execute_with_stats says.  Demo: a
+    # uniform dataset with a serving-tuned (tight) candidate capacity, and a
+    # batch that is mostly tile-local plus a full-bbox diagonal — the
+    # diagonal's Morton block straddles the grid's Z-order seams, its
+    # candidate rectangle overflows the capacity, and ONLY its queries are
+    # ring-searched exactly (never wrong, just slower); the rest keep the
+    # kernel fast path, and sparse blocks skip their all-sentinel candidate
+    # tiles entirely (DESIGN.md §6).
+    udx, udy, _ = uniform_points(4096, seed=4)
+    udz = truth(udx, udy).astype(np.float32)
+    tight = build_plan(udx, udy, udz, params=params, area=1.0, impl="grid",
+                       query_occupancy=64.0, seam_level=0)
+    local = (0.05 + 0.03 * rng.random((256, 2))).astype(np.float32)
+    diag = np.linspace(0.02, 0.98, 256).astype(np.float32)
+    sqx = np.concatenate([local[:, 0], diag])
+    sqy = np.concatenate([local[:, 1], diag])
+    _, _, stats = execute_with_stats(tight, sqx, sqy)
+    print("seam-straddling batch diagnostics (execute_with_stats):")
+    print(f"  overflow_blocks={int(stats['overflow_blocks'])} "
+          f"overflow_queries={int(stats['overflow_queries'])} of {sqx.shape[0]} "
+          f"(ring-searched exactly; the rest stay on the kernel fast path)")
+    print(f"  skipped_tile_fraction={float(stats['skipped_tile_fraction']):.2f} "
+          f"whole_batch_fallback={bool(stats['grid_fallback'])}")
 
     rmse = lambda z: float(np.sqrt(np.mean((np.asarray(z) - q_truth) ** 2)))
     print(f"data points: {dx.shape[0]}, queries: {qx.shape[0]}")

@@ -224,7 +224,7 @@ def _ring_cell_offset(r, i):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def grid_knn(grid: UniformGrid, qx, qy, k: int):
+def grid_knn(grid: UniformGrid, qx, qy, k: int, active=None):
     """Exact k nearest neighbours via expanding ring search.
 
     Returns ``(n, k)`` squared distances, ascending.  If the grid holds
@@ -236,6 +236,13 @@ def grid_knn(grid: UniformGrid, qx, qy, k: int):
     entirely-empty rings complete in a single iteration, and a query stops
     as soon as the ring bound proves its k-best is final (see module
     docstring for the invariant).
+
+    ``active`` (optional bool ``(n,)``) masks the search to a subset of
+    queries: inactive queries start ``done`` (their rows stay +inf) and add
+    no loop iterations, so the cost is bounded by the *active* queries'
+    ring work — an all-inactive batch exits in zero iterations.  This is
+    what the engine's per-block overflow blend uses to ring-search only the
+    queries whose block exceeded the plan's static candidate capacity.
     """
     n = qx.shape[0]
     dtype = qx.dtype
@@ -276,20 +283,22 @@ def grid_knn(grid: UniformGrid, qx, qy, k: int):
         i = jnp.where(adv, 0, jnp.where(scan_now, i + 1, i))
         return best, r, i, done
 
+    done0 = jnp.zeros((n,), bool) if active is None else ~active
     state = (
         jnp.full((n, k), jnp.inf, dtype),
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), jnp.int32),
-        jnp.zeros((n,), bool),
+        done0,
     )
     best, _, _, _ = jax.lax.while_loop(cond, body, state)
     return best
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def grid_r_obs(grid: UniformGrid, qx, qy, k: int):
-    """Phase-1 statistic: mean distance to the k nearest data points."""
-    return jnp.mean(jnp.sqrt(grid_knn(grid, qx, qy, k)), axis=1)
+def grid_r_obs(grid: UniformGrid, qx, qy, k: int, active=None):
+    """Phase-1 statistic: mean distance to the k nearest data points.
+    Inactive queries (see :func:`grid_knn`) return +inf."""
+    return jnp.mean(jnp.sqrt(grid_knn(grid, qx, qy, k, active)), axis=1)
 
 
 def required_radius(grid: UniformGrid, cx, cy, k: int):
@@ -391,6 +400,64 @@ def static_cell_radius(grid: UniformGrid, r_need_table):
         indexing="ij",
     )
     return jnp.clip(jnp.maximum(r_safe, r_need_table), 0, cover_radius(grid, xs, ys))
+
+
+def seam_segment_ids(grid: UniformGrid, cx, cy, level: int):
+    """Morton quadrant id (``0 .. 4**level - 1``) of each home cell.
+
+    ``level`` recursive quadrant splits of the (power-of-two ceiling of the)
+    grid: the id is the Morton interleave of the top ``level`` bits of each
+    cell axis, i.e. exactly ``morton_ids(cx, cy) >> 2*(nbits - level)``.
+    Because those are the *most significant* bits of the full Morton id, the
+    segment id is nondecreasing along any Morton-sorted cell order — a
+    Morton-sorted query batch is already segment-contiguous, which is what
+    :func:`seam_layout` relies on to split query blocks at seams.
+    """
+    if level <= 0:
+        return jnp.zeros(jnp.shape(cx), jnp.int32)
+    nbits = max((max(grid.gx, grid.gy) - 1).bit_length(), level)
+    shift = nbits - level
+    return morton_ids(cx >> shift, cy >> shift)
+
+
+def seam_layout(seg_sorted, n_segments: int, block_q: int, n_slots: int):
+    """Block layout that never straddles a Morton seam — gather/scatter maps.
+
+    A Morton-contiguous block of ``block_q`` queries that straddles a
+    top-level Z-order quadrant boundary has home cells on *both* sides of
+    the grid's centre cross, so its candidate rectangle approaches full grid
+    width and blows past any sane static capacity (the measured m=100K
+    overflow in ROADMAP.md).  The fix: pad each seam segment up to a
+    multiple of ``block_q`` so block boundaries coincide with segment
+    boundaries.
+
+    Args:
+      seg_sorted: ``(n_tot,)`` int32 nondecreasing segment id per
+        Morton-sorted query (from :func:`seam_segment_ids`).
+      n_segments: static segment-id bound (``4**level``).
+      n_slots: static output length; any value ``>= n_tot +
+        n_segments * block_q`` (the worst-case padding) works.
+
+    Returns ``(src, dest)``: ``src (n_slots,)`` gathers the sorted arrays
+    into the split layout — slots past a segment's true count repeat the
+    segment's *last* query (the ``pad_tail`` trick, kept local to the
+    segment so pad blocks have one-cell rectangles), and slots past the last
+    segment repeat the final query.  ``dest (n_tot,)`` is each sorted
+    query's slot (``src[dest[i]] == i``), for mapping per-slot results back.
+    """
+    n_tot = seg_sorted.shape[0]
+    zero = jnp.zeros((1,), jnp.int32)
+    counts = jnp.zeros((n_segments,), jnp.int32).at[seg_sorted].add(1)
+    starts = jnp.concatenate([zero, jnp.cumsum(counts)])
+    padded = jnp.concatenate([zero, jnp.cumsum(-(-counts // block_q) * block_q)])
+    d = jnp.arange(n_slots, dtype=jnp.int32)
+    seg_of = jnp.clip(jnp.searchsorted(padded, d, side="right").astype(jnp.int32) - 1,
+                      0, n_segments - 1)
+    within = d - padded[seg_of]
+    src = starts[seg_of] + jnp.minimum(within, jnp.maximum(counts[seg_of] - 1, 0))
+    src = jnp.minimum(src, n_tot - 1)  # trailing slots (and empty tail segments)
+    dest = padded[seg_sorted] + jnp.arange(n_tot, dtype=jnp.int32) - starts[seg_sorted]
+    return src, dest
 
 
 def morton_ids(cx, cy):

@@ -7,12 +7,15 @@ hit the cache on every further batch — the "build once, execute per
 request" serving shape.
 
 The grid path (DESIGN.md §6) runs entirely under the trace: Morton sort,
-per-query safe radii from the plan's ``required_radius`` table (closed form
-— no while-loop), the static-capacity CSR candidate gather, Phase 1 over
-candidate rows and the full-data Phase 2.  Exactness is unconditional: when
-a query batch needs more candidates than the plan's capacity (far
-out-of-bbox queries, query distributions unlike the data), a ``lax.cond``
-switches Phase 1 to the exact expanding-ring search — slower, never wrong.
+seam-split block layout, per-query safe radii from the plan's
+``required_radius`` table (closed form — no while-loop), the
+static-capacity CSR candidate gather, the sparsity-skipping Phase 1 over
+candidate rows and the full-data Phase 2.  Exactness is unconditional and
+now *per block*: the kernel result is kept wherever a block's candidates
+fit the plan's capacity, and queries in overflowing blocks (far out-of-bbox
+queries, query distributions unlike the data) get their alpha from the
+exact expanding-ring search run *only for them* (masked) — the worst case
+is O(overflowed queries), never the whole batch.
 """
 
 from __future__ import annotations
@@ -21,7 +24,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aidw import _interpolate_pass2, adaptive_alpha, brute_r_obs
-from repro.core.grid import cell_of, grid_r_obs, morton_ids, safe_radius_from_need
+from repro.core.grid import (
+    cell_of,
+    grid_r_obs,
+    morton_ids,
+    safe_radius_from_need,
+    seam_layout,
+    seam_segment_ids,
+)
 from repro.core.layouts import pad_tail, pad_to
 from repro.engine.plan import InterpolationPlan
 from repro.kernels.aidw_fused import aidw_fused_soa
@@ -35,6 +45,29 @@ from repro.kernels.aidw_naive import aidw_naive_aoas, aidw_naive_soa
 from repro.kernels.aidw_tiled import aidw_tiled_aoas, aidw_tiled_soa
 from repro.kernels.aidw_tiled_v2 import aidw_tiled_v2_soa
 from repro.kernels.idw_tiled import idw_tiled_soa
+
+
+def _seam_split_layout(plan: InterpolationPlan, qx_s, qy_s, cx_s, cy_s):
+    """Regroup the Morton-sorted batch so no block straddles a Morton seam.
+
+    The plan's ``seam_level`` is capped per batch so the worst-case block
+    padding (one block per occupied quadrant) stays small relative to the
+    batch; everything is static given the query shape.  Returns the Phase-1
+    view ``(qx_v, qy_v, cx_v, cy_v)`` plus ``dest`` mapping each sorted
+    query to its slot (``None`` when splitting is off — the view IS the
+    sorted layout).  Phase 2 never sees the split layout: alpha is gathered
+    back through ``dest``, so its full-data sweep cost is untouched.
+    """
+    n_tot = qx_s.shape[0]
+    level = plan.seam_level
+    while level > 0 and (4 ** level) * plan.block_q > n_tot:
+        level -= 1
+    if level == 0:
+        return qx_s, qy_s, cx_s, cy_s, None
+    seg = seam_segment_ids(plan.grid, cx_s, cy_s, level)
+    n_slots = n_tot + (4 ** level) * plan.block_q
+    src, dest = seam_layout(seg, 4 ** level, plan.block_q, n_slots)
+    return qx_s[src], qy_s[src], cx_s[src], cy_s[src], dest
 
 
 def _execute_grid(plan: InterpolationPlan, qx, qy):
@@ -52,28 +85,47 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
     qy_s = pad_tail(qy[order], n_pad)
     cx_s, cy_s = cell_of(grid, qx_s, qy_s)
 
+    # Phase-1 view: seam-split blocks (rectangles can't straddle a Morton
+    # seam, the measured overflow worst case); pad slots repeat a real query
+    qx_v, qy_v, cx_v, cy_v, dest = _seam_split_layout(plan, qx_s, qy_s, cx_s, cy_s)
+
     # containment-safe radii: plan-time table + closed-form overhang term
-    r_need = plan.r_need[cy_s, cx_s]
-    r_safe = safe_radius_from_need(grid, qx_s, qy_s, cx_s, cy_s, r_need)
-    xlo, xhi, ylo, yhi = block_rectangles(grid, cx_s, cy_s, r_safe, plan.block_q)
+    r_need = plan.r_need[cy_v, cx_v]
+    r_safe = safe_radius_from_need(grid, qx_v, qy_v, cx_v, cy_v, r_need)
+    xlo, xhi, ylo, yhi = block_rectangles(grid, cx_v, cy_v, r_safe, plan.block_q)
     cand_x, cand_y, need = gather_candidates_csr(
         grid, xlo, xhi, ylo, yhi, plan.cand_capacity
     )
-    overflow = jnp.any(need > plan.cand_capacity)
 
-    def _phase1_fast(_):
-        return phase1_alpha_from_candidates(
-            qx_s, qy_s, cand_x, cand_y,
-            params=params, area=plan.area, m_real=plan.m,
-            block_q=plan.block_q, block_d=plan.cand_block_d,
-            interpret=plan.interpret,
-        )
+    # Phase 1, always on the kernel path: the per-block tile table clamps
+    # each block's walk to its own non-sentinel tiles ("prefetch"), and an
+    # overflowing block simply computes a (cheap, discarded) alpha from its
+    # first `cand_capacity` candidates
+    n_tiles_static = plan.cand_capacity // plan.cand_block_d
+    covered = jnp.minimum(need, plan.cand_capacity)
+    num_tiles = (covered + plan.cand_block_d - 1) // plan.cand_block_d
+    alpha_fast = phase1_alpha_from_candidates(
+        qx_v, qy_v, cand_x, cand_y,
+        params=params, area=plan.area, m_real=plan.m,
+        block_q=plan.block_q, block_d=plan.cand_block_d,
+        interpret=plan.interpret,
+        num_tiles=num_tiles if plan.pipeline == "prefetch" else None,
+    )
 
-    def _phase1_exact(_):
-        r_obs = grid_r_obs(grid, qx_s, qy_s, params.k)
-        return adaptive_alpha(r_obs, plan.m, plan.area, params).astype(dtype)[:, None]
-
-    alpha = jax.lax.cond(overflow, _phase1_exact, _phase1_fast, None)
+    # Per-block overflow blend: back in the sorted layout, ring-search ONLY
+    # queries whose block overflowed (masked — a clean batch adds zero loop
+    # iterations) and keep the kernel alpha everywhere else.  Exactness is
+    # per query: kernel where covered, ring search where not.
+    over_b = need > plan.cand_capacity
+    over_v = jnp.repeat(over_b, plan.block_q)
+    if dest is not None:
+        alpha_fast = alpha_fast[dest]
+        over_q = over_v[dest]
+    else:
+        over_q = over_v
+    r_obs = grid_r_obs(grid, qx_s, qy_s, params.k, active=over_q)
+    alpha_exact = adaptive_alpha(r_obs, plan.m, plan.area, params).astype(dtype)[:, None]
+    alpha = jnp.where(over_q[:, None], alpha_exact, alpha_fast)
 
     dxp, dyp, dzp = plan.data
     zhat = phase2_weights_full(
@@ -82,7 +134,26 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
         interpret=plan.interpret,
     )
     inv = jnp.argsort(order)
-    stats = {"grid_fallback": overflow, "cand_need_max": jnp.max(need)}
+    # diagnostics count only blocks holding at least one real query — seam
+    # pad blocks (all-duplicate, ~1 tile) would otherwise inflate the skip
+    # fraction and the overflow-block count
+    nb = need.shape[0]
+    if dest is not None:
+        real_slot = jnp.zeros((nb * plan.block_q,), bool).at[dest].set(True)
+        real_b = jnp.any(real_slot.reshape(nb, plan.block_q), axis=1)
+    else:
+        real_b = jnp.ones((nb,), bool)
+    n_real_tiles = jnp.maximum(jnp.sum(real_b.astype(jnp.int32)) * n_tiles_static, 1)
+    stats = {
+        # every real query took the ring path — the batch got no kernel help
+        "grid_fallback": jnp.all(over_q[:n]),
+        "cand_need_max": jnp.max(need),
+        "overflow_blocks": jnp.sum((over_b & real_b).astype(jnp.int32)),
+        "overflow_queries": jnp.sum(over_q[:n].astype(jnp.int32)),
+        "overflow_query_mask": over_q[:n][inv],
+        "skipped_tile_fraction": 1.0
+        - jnp.sum(jnp.where(real_b, num_tiles, 0)).astype(jnp.float32) / n_real_tiles,
+    }
     return zhat[:n, 0][inv], alpha[:n, 0][inv], stats
 
 
@@ -196,9 +267,16 @@ def execute(plan: InterpolationPlan, qx, qy):
 
 @jax.jit
 def execute_with_stats(plan: InterpolationPlan, qx, qy):
-    """Like :func:`execute` but also returns the impl's diagnostics:
-    ``grid``: ``grid_fallback`` (bool — this batch exceeded the plan's
-    static candidate capacity and took the exact ring-search path) and
-    ``cand_need_max``; ``tiled_v2``: the measured ``merge_fraction``.
+    """Like :func:`execute` but also returns the impl's diagnostics.
+
+    ``grid``: ``overflow_blocks`` / ``overflow_queries`` (how much of the
+    batch exceeded the plan's static candidate capacity and took the exact
+    masked ring-search arm of the blend), ``overflow_query_mask`` (bool
+    ``(n,)``, caller order — which queries those were),
+    ``skipped_tile_fraction`` (share of Phase-1 candidate-tile steps the
+    scalar-prefetch pipeline skipped as all-sentinel), ``cand_need_max``,
+    and ``grid_fallback`` (bool — EVERY query overflowed, i.e. the batch got
+    no kernel fast path at all; single blocks overflowing no longer drag the
+    batch down).  ``tiled_v2``: the measured ``merge_fraction``.
     The dict's *structure* is static per plan, so this jits identically."""
     return _execute(plan, qx, qy)

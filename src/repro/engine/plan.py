@@ -92,6 +92,8 @@ class InterpolationPlan:
     cand_capacity: int        # grid: static candidate-row width (points)
     cand_block_d: int         # grid: Phase-1 candidate tile (autotuned)
     grid_rebuilds: int        # grid: coarsening rebuilds during planning
+    seam_level: int           # grid: Morton quadrant split depth (0 = off)
+    pipeline: str             # grid Phase 1: "prefetch" (tile-skip) | "dense"
     # --- children ---
     data: tuple               # impl-specific padded arrays
     grid: UniformGrid | None
@@ -101,7 +103,8 @@ class InterpolationPlan:
         aux = (self.impl, self.layout, self.params, self.area, self.m,
                self.block_q, self.block_d, self.interpret, self.knn,
                self.q_chunk, self.d_chunk, self.idw_alpha,
-               self.cand_capacity, self.cand_block_d, self.grid_rebuilds)
+               self.cand_capacity, self.cand_block_d, self.grid_rebuilds,
+               self.seam_level, self.pipeline)
         return (self.data, self.grid, self.r_need), aux
 
     @classmethod
@@ -146,8 +149,29 @@ def _choose_candidate_capacity(grid: UniformGrid, r_need, block_q: int, m: int,
     return max(capacity, 1), r_static, window
 
 
+def _choose_seam_level(grid: UniformGrid, window: int) -> int:
+    """Morton seam-split depth from the occupancy histogram's window.
+
+    Splitting at depth L bounds every query block's home-cell bbox to one
+    ``4**L``-quadrant, so the seam-straddling rectangle blowup (a block with
+    home cells on both sides of the grid's centre cross has a bbox near full
+    grid width) cannot happen at any split boundary.  Deeper splits mean
+    smaller worst-case rectangles but more block padding, so go only as deep
+    as quadrants stay comfortably larger than the expected candidate window
+    ``window`` (the same densest-window statistic that sizes the capacity):
+    then a non-straddling block's rectangle was going to fit anyway and the
+    split costs at most one padded block per occupied quadrant.
+    """
+    level = 0
+    nbits = max(1, (max(grid.gx, grid.gy) - 1).bit_length())
+    while (level < min(nbits, 4)
+           and (min(grid.gx, grid.gy) >> (level + 1)) >= max(window, 4)):
+        level += 1
+    return level
+
+
 def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
-               query_occupancy):
+               query_occupancy, seam_level):
     """Grid-impl plan: snapshot + static capacity + block_d autotune."""
     m = int(dx.shape[0])
     dtype = jnp.asarray(dx).dtype
@@ -187,6 +211,9 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
     cand_block_d = min(block_d, max(128, _round_up(capacity, 128)))
     cand_capacity = _round_up(capacity, cand_block_d)
 
+    if seam_level is None:
+        seam_level = _choose_seam_level(grid, window)
+
     # Phase-2 full-data sweep: sentinel-pad to its own tile multiple
     bd2 = min(block_d, max(128, _round_up(m, 128)))
     big = coord_sentinel(dtype)
@@ -196,7 +223,8 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
         pad_to(jnp.asarray(dz), bd2, jnp.zeros((), dtype))[None, :],
     )
     return dict(block_d=bd2, cand_capacity=cand_capacity, cand_block_d=cand_block_d,
-                grid_rebuilds=rebuilds, data=data, grid=grid, r_need=r_need)
+                grid_rebuilds=rebuilds, seam_level=int(seam_level),
+                data=data, grid=grid, r_need=r_need)
 
 
 def build_plan(
@@ -215,6 +243,8 @@ def build_plan(
     idw_alpha: float = 2.0,
     target_occupancy: float | None = None,
     query_occupancy: float | None = None,
+    seam_level: int | None = None,
+    pipeline: str = "prefetch",
 ) -> InterpolationPlan:
     """Build an :class:`InterpolationPlan` from a dataset + configuration.
 
@@ -230,8 +260,16 @@ def build_plan(
     ``query_occupancy`` (grid impl) sizes the static candidate capacity: the
     expected queries per cell of a serving batch (default: data occupancy /
     4).  Lower values buy headroom for sparse batches at the cost of wider
-    candidate rows; batches beyond the capacity stay exact via the
-    ring-search fallback.
+    candidate rows; queries in blocks beyond the capacity stay exact via the
+    per-block ring-search blend.
+    ``seam_level`` (grid impl) is the Morton quadrant depth at which query
+    blocks are split during the execute-side sort so no block straddles a
+    top-level Z-order seam (the rectangle-blowup worst case); ``None``
+    auto-chooses from the occupancy histogram, ``0`` disables.
+    ``pipeline`` (grid impl) selects the Phase-1 kernel: "prefetch" (default;
+    scalar-prefetch indexed tile table — sparse blocks skip their
+    all-sentinel candidate tiles) or "dense" (every block walks the full
+    static capacity; the conservative fallback, bit-identical results).
     """
     valid_impls = _DENSE_IMPLS + ("grid", "idw", "chunked")
     if impl not in valid_impls:
@@ -245,6 +283,10 @@ def build_plan(
         raise ValueError("grid= is only meaningful with impl='grid' or knn='grid'")
     if impl == "chunked" and knn not in ("brute", "grid"):
         raise ValueError(f"knn must be 'brute' or 'grid', got {knn!r}")
+    if pipeline not in ("prefetch", "dense"):
+        raise ValueError(f"pipeline must be 'prefetch' or 'dense', got {pipeline!r}")
+    if seam_level is not None and not (0 <= int(seam_level) <= 8):
+        raise ValueError(f"seam_level must be in [0, 8], got {seam_level!r}")
 
     m = int(dx.shape[0])
     if impl != "idw" and m < params.k:
@@ -265,6 +307,7 @@ def build_plan(
         block_q=block_q, block_d=block_d, interpret=interp,
         knn=knn, q_chunk=q_chunk, d_chunk=d_chunk, idw_alpha=float(idw_alpha),
         cand_capacity=0, cand_block_d=0, grid_rebuilds=0,
+        seam_level=0, pipeline=pipeline,
         data=(), grid=None, r_need=None,
     )
 
@@ -272,7 +315,7 @@ def build_plan(
         fields.update(_plan_grid(
             dx, dy, dz, params=params, block_q=block_q, block_d=block_d,
             grid=grid, target_occupancy=target_occupancy,
-            query_occupancy=query_occupancy,
+            query_occupancy=query_occupancy, seam_level=seam_level,
         ))
     elif impl == "chunked":
         if knn == "grid" and grid is None:

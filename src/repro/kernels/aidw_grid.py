@@ -18,14 +18,22 @@ of ``(snapshot arrays, queries, static capacity)`` and runs under ``jax.jit``:
   capacity is exceeded (far out-of-bbox queries, adversarial batches) —
   the static fast path never silently drops a neighbour.
 * :func:`phase1_alpha_from_candidates` — Phase 1 (kNN → adaptive alpha) over
-  the candidate rows, same kernel body as the tiled version
-  (``_knn_kernel_soa``); per-query work is O(|neighbourhood|) instead of
-  O(m).
+  the candidate rows.  Two interchangeable pipelines behind one signature:
+  the **scalar-prefetch indexed** pipeline (default, ``num_tiles`` given)
+  drives a ``pltpu.PrefetchScalarGridSpec`` whose candidate index map clamps
+  each block's tile walk to its own non-sentinel tiles — a sparse block does
+  ``ceil(need/block_d)`` real steps instead of ``capacity/block_d`` (the
+  block-sparse / ragged-kernel idiom: clamped revisits cost no DMA, the
+  merge is predicated off) — and the **dense** fallback (``num_tiles=None``)
+  walks every tile with the same kernel body as the tiled version
+  (``_knn_kernel_soa``).  Either way per-query work is O(|neighbourhood|)
+  instead of O(m).
 * :func:`phase2_weights_full` — Phase 2 unchanged: AIDW weights ALL m data
   points, so the full-data sweep (``_weight_kernel_soa``) is reused verbatim.
 
-Morton sorting, padding, the overflow cond and the unsort live in
-``repro.engine.execute``; this module is only the kernel plumbing.
+Morton sorting, seam splitting, padding, the per-block overflow blend and
+the unsort live in ``repro.engine.execute``; this module is only the kernel
+plumbing.
 """
 
 from __future__ import annotations
@@ -39,6 +47,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.aidw import AIDWParams
 from repro.core.grid import UniformGrid
+from repro.kernels._common import alpha_from_best, merge_k_best, sq_dist_tile
 from repro.kernels.aidw_tiled import _SEMANTICS, _knn_kernel_soa, _weight_kernel_soa
 
 
@@ -106,34 +115,101 @@ def gather_candidates_csr(grid: UniformGrid, xlo, xhi, ylo, yhi, capacity: int):
     return grid.pt_x[idx], grid.pt_y[idx], need
 
 
+def _knn_kernel_skip(nt_ref, qx_ref, qy_ref, dx_ref, dy_ref, alpha_ref, best,
+                     *, m_real, area, params):
+    """Sparsity-skipping twin of ``_knn_kernel_soa``.
+
+    ``nt_ref`` is the scalar-prefetched per-block tile count: steps past it
+    are clamped revisits of the block's last real tile (no DMA) and the
+    k-best merge is predicated off, so an all-sentinel tail costs grid
+    overhead only.  Init/finish still fire on the first/last *grid* step —
+    the output block is written exactly once per query block.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best[...] = jnp.full(best.shape, jnp.inf, best.dtype)
+
+    @pl.when(j < nt_ref[i])
+    def _merge():
+        d2 = sq_dist_tile(qx_ref[...], qy_ref[...], dx_ref[...], dy_ref[...])
+        best[...] = merge_k_best(best[...], d2, data_axis=1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        alpha_ref[...] = alpha_from_best(best[...], m_real, area, params, data_axis=1)
+
+
 def phase1_alpha_from_candidates(
     qx_s, qy_s, cand_x, cand_y, *,
     params: AIDWParams, area: float, m_real: int,
     block_q: int, block_d: int, interpret: bool,
+    num_tiles=None,
 ):
-    """Phase 1 over per-block candidate rows (same body as the tiled kernel).
+    """Phase 1 over per-block candidate rows.
 
     qx_s/qy_s: (n_tot,) Morton-sorted padded queries, ``n_tot % block_q == 0``;
     cand_x/cand_y: (nb, c_tot) with ``c_tot % block_d == 0``.
     Returns alpha, shape ``(n_tot, 1)``.
+
+    ``num_tiles`` (optional ``(nb,)`` int32, ``ceil(covered_need/block_d)``)
+    selects the scalar-prefetch pipeline: block ``i``'s candidate index map
+    becomes ``min(j, num_tiles[i]-1)`` so its all-sentinel tail tiles are
+    never fetched and never merged — the per-block tile table the plan's
+    launch-wide capacity cannot express.  ``None`` keeps the dense walk
+    (every block streams all ``c_tot // block_d`` tiles); both pipelines
+    merge identical non-sentinel candidates, so their alpha agrees exactly.
     """
     n_tot = qx_s.shape[0]
     nb, c_tot = cand_x.shape
     dtype = qx_s.dtype
     qx2, qy2 = qx_s[:, None], qy_s[:, None]
-    q_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
-    c_spec = pl.BlockSpec((1, block_d), lambda i, j: (i, j))
-    o_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
-    return pl.pallas_call(
-        functools.partial(_knn_kernel_soa, m_real=m_real, area=area, params=params),
+    out_shape = jax.ShapeDtypeStruct((n_tot, 1), dtype)
+    scratch = [pltpu.VMEM((block_q, params.k), dtype)]
+
+    if num_tiles is None:
+        q_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+        c_spec = pl.BlockSpec((1, block_d), lambda i, j: (i, j))
+        o_spec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+        return pl.pallas_call(
+            functools.partial(_knn_kernel_soa, m_real=m_real, area=area, params=params),
+            grid=(nb, c_tot // block_d),
+            in_specs=[q_spec, q_spec, c_spec, c_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            compiler_params=_SEMANTICS,
+            interpret=interpret,
+        )(qx2, qy2, cand_x, cand_y)
+
+    def q_map(i, j, nt):
+        return (i, 0)
+
+    def c_map(i, j, nt):
+        # clamp past-need steps to the block's last real tile: Pallas skips
+        # the DMA for a revisited block index, the kernel skips the merge
+        return (i, jnp.maximum(jnp.minimum(j, nt[i] - 1), 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(nb, c_tot // block_d),
-        in_specs=[q_spec, q_spec, c_spec, c_spec],
-        out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((n_tot, 1), dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, params.k), dtype)],
+        in_specs=[
+            pl.BlockSpec((block_q, 1), q_map),
+            pl.BlockSpec((block_q, 1), q_map),
+            pl.BlockSpec((1, block_d), c_map),
+            pl.BlockSpec((1, block_d), c_map),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1), q_map),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_knn_kernel_skip, m_real=m_real, area=area, params=params),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         compiler_params=_SEMANTICS,
         interpret=interpret,
-    )(qx2, qy2, cand_x, cand_y)
+    )(num_tiles.astype(jnp.int32), qx2, qy2, cand_x, cand_y)
 
 
 def phase2_weights_full(

@@ -4,8 +4,11 @@ Since the plan/execute refactor (DESIGN.md §6) these are thin conveniences
 over ``repro.engine``: each call builds an :class:`InterpolationPlan`
 (padding, sentinel data points, SoA/AoaS layout, interpret-mode
 autodetection, the grid snapshot — all captured once, in one place) and
-runs the jitted ``execute`` step.  Callers that interpolate more than one
-query batch against the same dataset should hold the plan themselves:
+runs the jitted ``execute`` step.  Repeated convenience calls against the
+*same* data arrays reuse one memoized plan (a small weak-ref cache keyed on
+array identity + statics), so they stop paying the plan rebuild; callers
+that interpolate many query batches should still hold the plan themselves
+— it is explicit about lifetime and survives array identity changes:
 
     from repro.engine import build_plan, execute
     plan = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid")
@@ -15,13 +18,79 @@ query batch against the same dataset should hold the plan themselves:
 
 from __future__ import annotations
 
+import threading
 import warnings
+import weakref
+from collections import OrderedDict
 from typing import Literal
 
 from repro.core.aidw import AIDWParams
 
 Impl = Literal["naive", "tiled", "fused", "binned", "grid", "tiled_v2"]
 Layout = Literal["soa", "aoas"]
+
+# Plan memoization for the one-shot conveniences: repeated aidw()/idw() calls
+# against the same data arrays reuse one InterpolationPlan instead of paying
+# the eager plan build (grid snapshot, required_radius table, capacity sweep)
+# per call.  Keyed on the data arrays' ids + the static config; array ids are
+# only trusted while the arrays are alive and identical, so each entry holds
+# weakrefs that are re-checked on every hit (id reuse after GC cannot alias)
+# and that evict the entry when a data array is collected (a dead entry would
+# otherwise pin the plan's padded dataset copies until LRU overflow).
+# CAVEAT (documented on aidw/idw): identity-based memoization cannot see
+# in-place mutation of a cached array's contents — mutate-and-reinterpolate
+# callers must pass fresh arrays or call plan_cache_clear().
+_PLAN_CACHE: OrderedDict = OrderedDict()
+_PLAN_CACHE_MAX = 8
+# RLock, not Lock: the weakref eviction callback can fire during a GC that
+# happens to run inside a locked section on the same thread
+_PLAN_CACHE_LOCK = threading.RLock()
+_plan_cache_counters = {"hits": 0, "misses": 0}
+
+
+def plan_cache_clear():
+    """Drop all memoized convenience-API plans (test / memory-pressure hook)."""
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        _plan_cache_counters["hits"] = 0
+        _plan_cache_counters["misses"] = 0
+
+
+def _cached_build_plan(dx, dy, dz, **config):
+    from repro.engine import build_plan  # lazy: kernels <-> engine
+
+    try:
+        key = (id(dx), id(dy), id(dz), tuple(sorted(config.items())))
+        hash(key)
+    except TypeError:  # unhashable config (e.g. a prebuilt grid=): no caching
+        return build_plan(dx, dy, dz, **config)
+
+    with _PLAN_CACHE_LOCK:
+        entry = _PLAN_CACHE.get(key)
+        if entry is not None:
+            refs, plan = entry
+            if all(r() is a for r, a in zip(refs, (dx, dy, dz))):
+                _plan_cache_counters["hits"] += 1
+                _PLAN_CACHE.move_to_end(key)
+                return plan
+            del _PLAN_CACHE[key]  # id was reused by a different array
+
+    plan = build_plan(dx, dy, dz, **config)
+
+    def _evict(_ref, key=key):
+        with _PLAN_CACHE_LOCK:
+            _PLAN_CACHE.pop(key, None)
+
+    with _PLAN_CACHE_LOCK:
+        _plan_cache_counters["misses"] += 1
+        try:
+            refs = tuple(weakref.ref(a, _evict) for a in (dx, dy, dz))
+        except TypeError:  # unweakrefable inputs (plain lists, scalars): skip
+            return plan
+        _PLAN_CACHE[key] = (refs, plan)
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+    return plan
 
 
 def aidw(
@@ -46,14 +115,19 @@ def aidw(
     (threshold-skip kNN pass; use ``repro.engine.execute_with_stats`` for its
     merge-fraction diagnostic).
     ``layout``: "soa" | "aoas" — layout of the streamed data-point array.
+
+    Repeat calls with the *same* ``dx/dy/dz`` array objects reuse a memoized
+    plan (keyed on array identity, not contents): don't mutate data arrays
+    in place between calls — pass fresh arrays, or call
+    :func:`plan_cache_clear`.
     """
-    from repro.engine import build_plan, execute  # lazy: kernels <-> engine
+    from repro.engine import execute  # lazy: kernels <-> engine
 
     if impl not in ("naive", "tiled", "fused", "binned", "grid", "tiled_v2"):
         # the engine also plans "idw"/"chunked"; those have their own entry
         # points (idw(), aidw_interpolate()) with different semantics
         raise ValueError(impl)
-    plan = build_plan(
+    plan = _cached_build_plan(
         dx, dy, dz,
         params=params, area=area, impl=impl, layout=layout,
         block_q=block_q, block_d=block_d, interpret=interpret, grid=grid,
@@ -84,9 +158,9 @@ def aidw_v2(
         DeprecationWarning,
         stacklevel=2,
     )
-    from repro.engine import build_plan, execute_with_stats  # lazy: kernels <-> engine
+    from repro.engine import execute_with_stats  # lazy: kernels <-> engine
 
-    plan = build_plan(
+    plan = _cached_build_plan(
         dx, dy, dz,
         params=params, area=area, impl="tiled_v2",
         block_q=block_q, block_d=block_d, interpret=interpret,
@@ -103,10 +177,13 @@ def idw(
     block_d: int = 512,
     interpret: bool | None = None,
 ):
-    """Standard IDW via the tiled Pallas kernel (SoA). Returns z_hat (n,)."""
-    from repro.engine import build_plan, execute  # lazy: kernels <-> engine
+    """Standard IDW via the tiled Pallas kernel (SoA). Returns z_hat (n,).
 
-    plan = build_plan(
+    Plans are memoized on data-array identity (see :func:`aidw`): don't
+    mutate ``dx/dy/dz`` in place between calls."""
+    from repro.engine import execute  # lazy: kernels <-> engine
+
+    plan = _cached_build_plan(
         dx, dy, dz,
         impl="idw", idw_alpha=alpha,
         block_q=block_q, block_d=block_d, interpret=interpret,
