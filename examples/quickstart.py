@@ -67,6 +67,40 @@ def main():
     print(f"  skipped_tile_fraction={float(stats['skipped_tile_fraction']):.2f} "
           f"whole_batch_fallback={bool(stats['grid_fallback'])}")
 
+    # Phase 2 is a full m-point sweep in every exact impl.  phase2="farfield"
+    # sweeps exact weights only inside a plan-chosen near radius and folds one
+    # aggregate term per far cell — the first approximating path, so it ships
+    # with an error budget: the plan proves a worst-case bound, and
+    # farfield_error_report measures the real error against the Kahan oracle
+    # (DESIGN.md §7; the budget is enforced by tests/engine/test_farfield.py).
+    # The bound is meaningful when cells are compact relative to the near
+    # distance — demo data: tight per-cell sensor clusters on a coarse grid
+    # (on generic data the plan warns and reports an honest, weak bound).
+    from repro.core.accuracy import farfield_error_report
+    from repro.core.grid import build_grid
+    import jax.numpy as jnp
+
+    g = 12
+    centers = (np.stack(np.meshgrid(np.arange(g), np.arange(g)), -1)
+               .reshape(-1, 2) + 0.5) / g
+    spts = centers[rng.integers(0, g * g, 4096)] + rng.normal(0, 0.003, (4096, 2))
+    spts = np.clip(spts, 0.0, 1.0).astype(np.float32)
+    sdz = truth(spts[:, 0], spts[:, 1]).astype(np.float32)
+    sgrid = build_grid(jnp.asarray(spts[:, 0]), jnp.asarray(spts[:, 1]),
+                       jnp.asarray(sdz), gx=g, gy=g)
+    ff = build_plan(spts[:, 0], spts[:, 1], sdz, params=params, area=1.0,
+                    impl="grid", grid=sgrid, phase2="farfield",
+                    farfield_radius=3, block_q=64)
+    fq = rng.random((512, 2)).astype(np.float32)
+    report = farfield_error_report(ff, fq[:, 0], fq[:, 1])
+    _, _, ff_stats = execute_with_stats(ff, fq[:, 0], fq[:, 1])
+    print("far-field Phase 2 (near radius "
+          f"{ff.farfield_radius} cells, proved bound {ff.farfield_bound:.3g}):")
+    print(f"  near_points_mean={float(ff_stats['near_points_mean']):.0f} of m={ff.m}, "
+          f"far_cells_mean={float(ff_stats['far_cells_mean']):.0f}")
+    print(f"  measured max rel err {report['max_rel_err']:.2e} "
+          f"(within_bound={report['within_bound']})")
+
     rmse = lambda z: float(np.sqrt(np.mean((np.asarray(z) - q_truth) ** 2)))
     print(f"data points: {dx.shape[0]}, queries: {qx.shape[0]}")
     print(f"adaptive alpha range: [{float(np.min(alpha)):.2f}, {float(np.max(alpha)):.2f}]")

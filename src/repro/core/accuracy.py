@@ -93,3 +93,66 @@ def relative_rmse(approx, exact):
     approx = jnp.asarray(approx, jnp.float64) if approx.dtype != jnp.float64 else approx
     e = jnp.asarray(exact, approx.dtype)
     return float(jnp.sqrt(jnp.mean((approx - e) ** 2)) / jnp.sqrt(jnp.mean(e**2)))
+
+
+# Floating-point slack separating the far-field *model* bound (exact
+# arithmetic) from a measured comparison of two finite-precision pipelines:
+# both the approximated path and the Kahan oracle round, so a mathematically
+# 0-error case (one point per far cell — the aggregate IS the point; or a
+# phase2="exact" plan, bound 0.0) still measures O(eps).  The slack scales
+# with sqrt(m) because the compared path accumulates plain-dtype partial
+# sums over m terms (random-rounding growth); at 64 ulps * sqrt(m) it stays
+# orders of magnitude below any useful farfield_rtol (2.4e-3 at f32/m=100K)
+# while covering the measured drift of the exact impls vs the Kahan oracle
+# (the golden gate observes ~1e-4 relative at m=900).
+FP_SLACK_ULPS = 64
+
+
+def farfield_error_report(plan, qx, qy, *, q_chunk: int = 1024, d_chunk: int = 4096):
+    """Measure a plan's Phase-2 approximation error against the Kahan oracle.
+
+    The verification half of the far-field contract (the other half is the
+    plan-time model in ``engine.plan._choose_farfield_radius``): runs
+    ``execute(plan, qx, qy)``, recomputes the exact interpolant with the
+    Kahan-compensated oracle (:func:`aidw_interpolate_kahan` — ~f64-quality
+    accumulation at the data dtype), and reports the measured relative
+    error on the same scale the bound is stated on, ``max|z_data|``.
+
+    Returns a dict: ``max_rel_err`` / ``rms_rel_err`` / ``max_abs_err``
+    (diffs in f64), ``scale``, ``bound`` (the plan's ``farfield_bound``; 0.0
+    for exact plans), ``fp_slack`` (see :data:`FP_SLACK_ULPS`), and
+    ``within_bound`` — ``max_rel_err <= bound + fp_slack``, the predicate
+    the error-budget tests (``tests/engine/test_farfield.py``) enforce.
+    """
+    import numpy as np
+
+    from repro.engine import execute  # lazy: core <-> engine
+
+    if plan.impl != "grid":
+        raise ValueError("farfield_error_report expects an impl='grid' plan "
+                         f"(got impl={plan.impl!r})")
+    dxp, dyp, dzp = plan.data
+    dx, dy, dz = dxp[0, :plan.m], dyp[0, :plan.m], dzp[0, :plan.m]
+    z_approx, _ = execute(plan, qx, qy)
+    z_exact, _ = aidw_interpolate_kahan(
+        dx, dy, dz, qx, qy, plan.params,
+        area=plan.area, q_chunk=q_chunk, d_chunk=d_chunk,
+    )
+    za = np.asarray(z_approx, np.float64)
+    ze = np.asarray(z_exact, np.float64)
+    scale = max(float(np.max(np.abs(np.asarray(dz, np.float64)))), 1e-300)
+    diff = np.abs(za - ze)
+    bound = float(plan.farfield_bound)
+    fp_slack = (FP_SLACK_ULPS * float(jnp.finfo(dx.dtype).eps)
+                * max(1.0, float(np.sqrt(plan.m))))
+    max_rel = float(diff.max() / scale) if diff.size else 0.0
+    return {
+        "max_rel_err": max_rel,
+        "rms_rel_err": float(np.sqrt(np.mean(diff**2)) / scale) if diff.size else 0.0,
+        "max_abs_err": float(diff.max()) if diff.size else 0.0,
+        "scale": scale,
+        "bound": bound,
+        "fp_slack": fp_slack,
+        "within_bound": max_rel <= bound + fp_slack,
+        "n_queries": int(np.asarray(qx).shape[0]),
+    }

@@ -10,7 +10,9 @@ The grid path (DESIGN.md §6) runs entirely under the trace: Morton sort,
 seam-split block layout, per-query safe radii from the plan's
 ``required_radius`` table (closed form — no while-loop), the
 static-capacity CSR candidate gather, the sparsity-skipping Phase 1 over
-candidate rows and the full-data Phase 2.  Exactness is unconditional and
+candidate rows and the full-data Phase 2 — or, for
+``build_plan(phase2="farfield")`` plans, the near/far split Phase 2 with a
+plan-proved error bound (DESIGN.md §7).  Exactness is unconditional and
 now *per block*: the kernel result is kept wherever a block's candidates
 fit the plan's capacity, and queries in overflowing blocks (far out-of-bbox
 queries, query distributions unlike the data) get their alpha from the
@@ -19,6 +21,10 @@ is O(overflowed queries), never the whole batch.
 """
 
 from __future__ import annotations
+
+import threading
+import warnings
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +45,8 @@ from repro.kernels.aidw_grid import (
     block_rectangles,
     gather_candidates_csr,
     phase1_alpha_from_candidates,
+    phase2_far_aggregates,
+    phase2_near_weights,
     phase2_weights_full,
 )
 from repro.kernels.aidw_naive import aidw_naive_aoas, aidw_naive_soa
@@ -52,22 +60,81 @@ def _seam_split_layout(plan: InterpolationPlan, qx_s, qy_s, cx_s, cy_s):
 
     The plan's ``seam_level`` is capped per batch so the worst-case block
     padding (one block per occupied quadrant) stays small relative to the
-    batch; everything is static given the query shape.  Returns the Phase-1
-    view ``(qx_v, qy_v, cx_v, cy_v)`` plus ``dest`` mapping each sorted
-    query to its slot (``None`` when splitting is off — the view IS the
-    sorted layout).  Phase 2 never sees the split layout: alpha is gathered
-    back through ``dest``, so its full-data sweep cost is untouched.
+    batch; everything is static given the query shape.  Returns the blocked
+    view ``(qx_v, qy_v, cx_v, cy_v)`` plus ``src`` (slot -> sorted index:
+    maps per-query arrays like the blended alpha INTO the view) and ``dest``
+    (sorted index -> slot: maps per-slot results back); both ``None`` when
+    splitting is off — the view IS the sorted layout.  The exact Phase 2
+    never sees the split layout (alpha is gathered back through ``dest``,
+    so its full-data sweep cost is untouched); the far-field Phase 2 runs
+    in the view, whose per-block rectangles it shares with Phase 1.
     """
     n_tot = qx_s.shape[0]
     level = plan.seam_level
     while level > 0 and (4 ** level) * plan.block_q > n_tot:
         level -= 1
     if level == 0:
-        return qx_s, qy_s, cx_s, cy_s, None
+        return qx_s, qy_s, cx_s, cy_s, None, None
     seg = seam_segment_ids(plan.grid, cx_s, cy_s, level)
     n_slots = n_tot + (4 ** level) * plan.block_q
     src, dest = seam_layout(seg, 4 ** level, plan.block_q, n_slots)
-    return qx_s[src], qy_s[src], cx_s[src], cy_s[src], dest
+    return qx_s[src], qy_s[src], cx_s[src], cy_s[src], src, dest
+
+
+def _tile_table(need, capacity: int, block_d: int, pipeline: str):
+    """Per-block real-tile counts for the scalar-prefetch pipelines — the ONE
+    place the "dense walk is bit-identical because skipped tiles are
+    all-sentinel" invariant is encoded.  "prefetch" clamps each block to the
+    tiles its (capacity-covered) candidates occupy; "dense" walks every
+    static tile."""
+    if pipeline == "prefetch":
+        covered = jnp.minimum(need, capacity)
+        return (covered + block_d - 1) // block_d
+    return jnp.full(need.shape, capacity // block_d, jnp.int32)
+
+
+def _phase2_farfield(plan: InterpolationPlan, qx_v, qy_v, alpha_v,
+                     cx_v=None, cy_v=None):
+    """Far-field Phase 2 over a blocked query view (DESIGN.md §7).
+
+    ``qx_v/qy_v`` is any Morton-blocked layout whose length is a multiple of
+    ``plan.block_q`` (the engine passes the seam-split Phase-1 view, the
+    benchmark the plain sorted batch); ``alpha_v (n_tot, 1)`` the matching
+    per-slot alpha; ``cx_v/cy_v`` the view's clamped home cells if the
+    caller already holds them.  Per block: the near rectangle is the
+    home-cell bbox expanded by the plan's near-field radius; its points are
+    swept exactly (CSR gather at the static ``p2_capacity``, tile-table
+    skip), every cell outside it contributes one aggregate term.  Returns
+    ``(z (n_tot, 1), need (nb,), rect_cells (nb,))`` — ``need >
+    p2_capacity`` flags blocks whose near gather was truncated; the caller
+    must route those queries to the exact sweep (the error bound assumes a
+    complete near field).
+    """
+    grid = plan.grid
+    if cx_v is None or cy_v is None:
+        cx_v, cy_v = cell_of(grid, qx_v, qy_v)
+    r_near = jnp.full(cx_v.shape, plan.farfield_radius, jnp.int32)
+    xlo, xhi, ylo, yhi = block_rectangles(grid, cx_v, cy_v, r_near, plan.block_q)
+    cand_x, cand_y, cand_z, need = gather_candidates_csr(
+        grid, xlo, xhi, ylo, yhi, plan.p2_capacity, with_z=True
+    )
+    num_tiles = _tile_table(need, plan.p2_capacity, plan.p2_block_d,
+                            plan.pipeline)
+    ah = alpha_v * 0.5
+    sw_n, swz_n, md_n, hz_n = phase2_near_weights(
+        qx_v, qy_v, ah, cand_x, cand_y, cand_z, num_tiles,
+        block_q=plan.block_q, block_d=plan.p2_block_d, interpret=plan.interpret,
+    )
+    rects = jnp.stack([xlo, xhi, ylo, yhi], axis=1)
+    sw_f, swz_f = phase2_far_aggregates(
+        qx_v, qy_v, ah, rects, plan.far,
+        block_q=plan.block_q, block_d=plan.p2_far_block_d,
+        interpret=plan.interpret,
+    )
+    z = jnp.where(md_n <= plan.params.exact_hit_eps, hz_n,
+                  (swz_n + swz_f) / (sw_n + sw_f))
+    rect_cells = (xhi - xlo + 1) * (yhi - ylo + 1)
+    return z, need, rect_cells
 
 
 def _execute_grid(plan: InterpolationPlan, qx, qy):
@@ -87,7 +154,7 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
 
     # Phase-1 view: seam-split blocks (rectangles can't straddle a Morton
     # seam, the measured overflow worst case); pad slots repeat a real query
-    qx_v, qy_v, cx_v, cy_v, dest = _seam_split_layout(plan, qx_s, qy_s, cx_s, cy_s)
+    qx_v, qy_v, cx_v, cy_v, src, dest = _seam_split_layout(plan, qx_s, qy_s, cx_s, cy_s)
 
     # containment-safe radii: plan-time table + closed-form overhang term
     r_need = plan.r_need[cy_v, cx_v]
@@ -102,8 +169,10 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
     # overflowing block simply computes a (cheap, discarded) alpha from its
     # first `cand_capacity` candidates
     n_tiles_static = plan.cand_capacity // plan.cand_block_d
-    covered = jnp.minimum(need, plan.cand_capacity)
-    num_tiles = (covered + plan.cand_block_d - 1) // plan.cand_block_d
+    # always the prefetch-style count: the dense pipeline ignores it but the
+    # skipped_tile_fraction diagnostic reports what the launch WOULD skip
+    num_tiles = _tile_table(need, plan.cand_capacity, plan.cand_block_d,
+                            "prefetch")
     alpha_fast = phase1_alpha_from_candidates(
         qx_v, qy_v, cand_x, cand_y,
         params=params, area=plan.area, m_real=plan.m,
@@ -128,11 +197,39 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
     alpha = jnp.where(over_q[:, None], alpha_exact, alpha_fast)
 
     dxp, dyp, dzp = plan.data
-    zhat = phase2_weights_full(
-        qx_s, qy_s, alpha, dxp, dyp, dzp,
-        eps=params.exact_hit_eps, block_q=plan.block_q, block_d=plan.block_d,
-        interpret=plan.interpret,
-    )
+    if plan.phase2 == "farfield":
+        # far-field Phase 2 runs in the seam-split view (its rectangles must
+        # not straddle Morton seams either); alpha maps in through src, the
+        # per-slot z maps back through dest.  Blocks whose near field
+        # overflows p2_capacity would violate the error bound (truncated
+        # near gather), so their queries take the exact full sweep instead —
+        # computed at most once per batch, skipped entirely when clean.
+        alpha_v = alpha[src] if src is not None else alpha
+        z_v, need2, rect_cells = _phase2_farfield(plan, qx_v, qy_v, alpha_v,
+                                                  cx_v, cy_v)
+        over2_v = jnp.repeat(need2 > plan.p2_capacity, plan.block_q)
+        if dest is not None:
+            z_near = z_v[dest]
+            over2_s = over2_v[dest]
+        else:
+            z_near = z_v
+            over2_s = over2_v
+        z_full = jax.lax.cond(
+            jnp.any(over2_s[:n]),
+            lambda: phase2_weights_full(
+                qx_s, qy_s, alpha, dxp, dyp, dzp,
+                eps=params.exact_hit_eps, block_q=plan.block_q,
+                block_d=plan.block_d, interpret=plan.interpret,
+            ),
+            lambda: jnp.zeros_like(z_near),
+        )
+        zhat = jnp.where(over2_s[:, None], z_full, z_near)
+    else:
+        zhat = phase2_weights_full(
+            qx_s, qy_s, alpha, dxp, dyp, dzp,
+            eps=params.exact_hit_eps, block_q=plan.block_q, block_d=plan.block_d,
+            interpret=plan.interpret,
+        )
     inv = jnp.argsort(order)
     # diagnostics count only blocks holding at least one real query — seam
     # pad blocks (all-duplicate, ~1 tile) would otherwise inflate the skip
@@ -154,6 +251,17 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
         "skipped_tile_fraction": 1.0
         - jnp.sum(jnp.where(real_b, num_tiles, 0)).astype(jnp.float32) / n_real_tiles,
     }
+    if plan.phase2 == "farfield":
+        n_real_b = jnp.maximum(jnp.sum(real_b.astype(jnp.int32)), 1).astype(jnp.float32)
+        stats.update({
+            "near_points_mean": jnp.sum(
+                jnp.where(real_b, need2, 0)).astype(jnp.float32) / n_real_b,
+            "far_cells_mean": jnp.sum(
+                jnp.where(real_b, grid.n_cells - rect_cells, 0)
+            ).astype(jnp.float32) / n_real_b,
+            "farfield_rtol_bound": plan.farfield_bound,
+            "p2_overflow_queries": jnp.sum(over2_s[:n].astype(jnp.int32)),
+        })
     return zhat[:n, 0][inv], alpha[:n, 0][inv], stats
 
 
@@ -266,6 +374,43 @@ def execute(plan: InterpolationPlan, qx, qy):
 
 
 @jax.jit
+def _execute_with_stats_jit(plan: InterpolationPlan, qx, qy):
+    return _execute(plan, qx, qy)
+
+
+# ---- persistent-overflow tracking (ROADMAP capacity-model item) -------------
+# The plan's static candidate capacity is sized from an *assumed* serving
+# density (`query_occupancy`); a workload that is persistently sparser keeps
+# paying the exact ring-search arm batch after batch.  execute_with_stats
+# counts, per plan object, the consecutive diagnostic batches with
+# overflow_queries > 0 and surfaces `persistent_overflow` (plus a one-shot
+# RuntimeWarning) once the streak reaches the threshold — the hook a future
+# per-batch capacity re-estimator will replace with an automatic re-plan.
+PERSISTENT_OVERFLOW_BATCHES = 3
+_overflow_streaks: dict[int, int] = {}
+_overflow_lock = threading.Lock()
+
+
+def _note_overflow(plan: InterpolationPlan, n_overflow: int) -> bool:
+    key = id(plan)
+    with _overflow_lock:
+        if key not in _overflow_streaks:
+            weakref.finalize(plan, _overflow_streaks.pop, key, None)
+        streak = _overflow_streaks.get(key, 0) + 1 if n_overflow > 0 else 0
+        _overflow_streaks[key] = streak
+    if streak == PERSISTENT_OVERFLOW_BATCHES:
+        warnings.warn(
+            f"overflow_queries > 0 for {streak} consecutive batches against "
+            "this plan: the static candidate capacity looks undersized for "
+            "the serving workload (results stay exact via the ring-search "
+            "blend, but at ring-search cost). Consider re-planning with a "
+            "lower query_occupancy= or a coarser grid.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return streak >= PERSISTENT_OVERFLOW_BATCHES
+
+
 def execute_with_stats(plan: InterpolationPlan, qx, qy):
     """Like :func:`execute` but also returns the impl's diagnostics.
 
@@ -275,8 +420,35 @@ def execute_with_stats(plan: InterpolationPlan, qx, qy):
     ``(n,)``, caller order — which queries those were),
     ``skipped_tile_fraction`` (share of Phase-1 candidate-tile steps the
     scalar-prefetch pipeline skipped as all-sentinel), ``cand_need_max``,
-    and ``grid_fallback`` (bool — EVERY query overflowed, i.e. the batch got
-    no kernel fast path at all; single blocks overflowing no longer drag the
-    batch down).  ``tiled_v2``: the measured ``merge_fraction``.
-    The dict's *structure* is static per plan, so this jits identically."""
-    return _execute(plan, qx, qy)
+    ``grid_fallback`` (bool — EVERY query overflowed, i.e. the batch got no
+    kernel fast path at all; single blocks overflowing no longer drag the
+    batch down), and ``persistent_overflow`` (host-side bool — overflow has
+    now persisted for ``PERSISTENT_OVERFLOW_BATCHES`` consecutive diagnostic
+    batches against this plan object; a RuntimeWarning suggesting a re-plan
+    fires when the streak is first reached).  ``grid`` with
+    ``phase2="farfield"`` additionally reports ``near_points_mean`` /
+    ``far_cells_mean`` (per real query block), the plan's proved
+    ``farfield_rtol_bound``, and ``p2_overflow_queries`` (queries routed to
+    the exact Phase-2 sweep because their block's near gather overflowed).
+    ``tiled_v2``: the measured ``merge_fraction``.
+    The computation is jitted with a static dict structure per plan (no
+    retrace across same-shape batches); only the streak bookkeeping runs on
+    the host, which is why this entry — unlike :func:`execute` — syncs on
+    ``overflow_queries``."""
+    z, a, stats = _execute_with_stats_jit(plan, qx, qy)
+    # Under an OUTER jit the call inlines and the stats are tracers: the
+    # host-side streak bookkeeping cannot (and should not) run there — the
+    # dict then simply lacks the persistent_overflow key, exactly the
+    # pre-tracking behaviour, instead of raising on int(tracer).
+    if plan.impl == "grid" and not isinstance(
+        stats["overflow_queries"], jax.core.Tracer
+    ):
+        stats = dict(stats)
+        stats["persistent_overflow"] = _note_overflow(
+            plan, int(stats["overflow_queries"])
+        )
+    return z, a, stats
+
+
+# the no-retrace contract is asserted against the underlying jit cache
+execute_with_stats._cache_size = _execute_with_stats_jit._cache_size

@@ -36,6 +36,7 @@ from repro.core.grid import (
     DEFAULT_OCCUPANCY,
     UniformGrid,
     build_grid,
+    cell_aggregates,
     required_radius_table,
     static_cell_radius,
 )
@@ -54,6 +55,15 @@ _SOA_ONLY = ("binned", "fused", "grid", "tiled_v2", "idw", "chunked")
 # A well-sized grid sits at r_safe ~ 2-3 (see ``static_cell_radius``).
 _MAX_SAFE_RADIUS = 6
 _MAX_REBUILDS = 3
+
+# Far-field fallback: when the requested rtol is unprovable at any
+# profitable radius, take the cheapest radius proving at least this bound
+# (worst-case relative error above ~half the data scale promises nothing).
+_FALLBACK_BOUND_CEIL = 0.5
+
+# Per-tile element budget for the Phase-2 near/far sweeps: block_q * tile_d
+# capped so the in-kernel (block_q, tile_d) f32 distance tile stays ~1 MiB.
+_P2_TILE_ELEMS = 64 * 4096
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -94,23 +104,33 @@ class InterpolationPlan:
     grid_rebuilds: int        # grid: coarsening rebuilds during planning
     seam_level: int           # grid: Morton quadrant split depth (0 = off)
     pipeline: str             # grid Phase 1: "prefetch" (tile-skip) | "dense"
+    phase2: str               # grid Phase 2: "exact" (full sweep) | "farfield"
+    farfield_rtol: float      # farfield: user-requested relative error target
+    farfield_radius: int      # farfield: near-field Chebyshev radius (cells)
+    farfield_bound: float     # farfield: proved worst-case relative error
+    p2_capacity: int          # farfield: static near-field candidate width
+    p2_block_d: int           # farfield: near-field sweep tile
+    p2_far_block_d: int       # farfield: far cell-aggregate sweep tile
     # --- children ---
     data: tuple               # impl-specific padded arrays
     grid: UniformGrid | None
     r_need: jnp.ndarray | None  # (gy, gx) int32 per-cell required_radius
+    far: tuple                # farfield: padded (1, ncp) cell-aggregate arrays
 
     def tree_flatten(self):
         aux = (self.impl, self.layout, self.params, self.area, self.m,
                self.block_q, self.block_d, self.interpret, self.knn,
                self.q_chunk, self.d_chunk, self.idw_alpha,
                self.cand_capacity, self.cand_block_d, self.grid_rebuilds,
-               self.seam_level, self.pipeline)
-        return (self.data, self.grid, self.r_need), aux
+               self.seam_level, self.pipeline, self.phase2,
+               self.farfield_rtol, self.farfield_radius, self.farfield_bound,
+               self.p2_capacity, self.p2_block_d, self.p2_far_block_d)
+        return (self.data, self.grid, self.r_need, self.far), aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        data, grid, r_need = children
-        return cls(*aux, data=data, grid=grid, r_need=r_need)
+        data, grid, r_need, far = children
+        return cls(*aux, data=data, grid=grid, r_need=r_need, far=far)
 
 
 def _choose_candidate_capacity(grid: UniformGrid, r_need, block_q: int, m: int,
@@ -128,7 +148,9 @@ def _choose_candidate_capacity(grid: UniformGrid, r_need, block_q: int, m: int,
     execute time (sparser/far-out-of-bbox batches) take the exact
     ring-search fallback instead of losing neighbours.
 
-    Returns ``(capacity, r_static, window)`` — all concrete ints.
+    Returns ``(capacity, r_static, window, side)`` — all concrete ints
+    (``side`` is reused to size the farfield near-field capacity with the
+    same block-bbox model).
     """
     r_cell = static_cell_radius(grid, r_need)
     r_static = int(jnp.max(r_cell))
@@ -138,6 +160,13 @@ def _choose_candidate_capacity(grid: UniformGrid, r_need, block_q: int, m: int,
     query_occupancy = max(query_occupancy, 0.5)
     side = 2 * math.ceil(math.sqrt(block_q / query_occupancy))
     window = min(side + 2 * r_static + 1, max(grid.gx, grid.gy))
+    capacity = _densest_window_count(grid, window)
+    return capacity, r_static, window, side
+
+
+def _densest_window_count(grid: UniformGrid, window: int) -> int:
+    """Max point count of any ``window x window`` cell block — one
+    integral-image sweep, concrete int."""
     c = grid.cum
     ys = jnp.minimum(jnp.arange(grid.gy, dtype=jnp.int32) + window, grid.gy)
     xs = jnp.minimum(jnp.arange(grid.gx, dtype=jnp.int32) + window, grid.gx)
@@ -145,8 +174,134 @@ def _choose_candidate_capacity(grid: UniformGrid, r_need, block_q: int, m: int,
     x0 = jnp.arange(grid.gx, dtype=jnp.int32)
     sums = (c[ys[:, None], xs[None, :]] - c[y0[:, None], xs[None, :]]
             - c[ys[:, None], x0[None, :]] + c[y0[:, None], x0[None, :]])
-    capacity = int(jnp.max(sums))
-    return max(capacity, 1), r_static, window
+    return max(int(jnp.max(sums)), 1)
+
+
+def _farfield_bound_model(radius: int, cell_min: float, a_max: float,
+                          e_max: float, z_dev_max: float, z_abs_max: float):
+    """Worst-case relative error of the far-field Phase 2 at a given
+    near-field radius — the provable half of the error budget (DESIGN.md §7).
+
+    Geometry (the ring-search invariant, which survives out-of-bbox queries):
+    every far cell — Chebyshev cell-distance ``>= radius + 1`` from the
+    query's clamped home cell — has all its points, and therefore its
+    centroid, at Euclidean distance ``d_c >= radius * cell_min``, with every
+    point within ``e_max`` of the centroid.  Let ``tau = e_max / (radius *
+    cell_min)`` (>= the per-cell dispersion ratio of every far cell) and
+    ``A = max(alpha_levels)`` (every per-weight term below increases with
+    alpha).
+
+    Because the centroid zeroes the first moment of the cell's points, the
+    count term ``n_c * w(d_c)`` matches ``sum_j w_j`` to SECOND order in the
+    dispersion: Taylor with the Lagrange Hessian of ``w(p) = |q - p|^-a``
+    (largest eigenvalue ``a*(a+1)*d^-a-2``, evaluated no closer than
+    ``d_c - e``) gives
+
+        |n w(d_c) - sum w_j| <= eps2 * n * w(d_c),
+        eps2 = 0.5 * A * (A+1) * tau^2 * (1 - tau)^-(A+2).
+
+    The z-sum term ``w(d_c) * S_c`` additionally pays a FIRST-order price
+    for z varying inside the cell: splitting ``z_j = zbar_c + dz_j``,
+
+        |w(d_c) S_c - sum w_j z_j| <= (|zbar_c| eps2 + eta * z_dev_max) * n * w(d_c),
+        eta = (1 - tau)^-A - 1   (per-point weight spread at dispersion tau).
+
+    With ``sum_cell w_j >= n w(d_c) (1+tau)^-A``, the exact interpolant a
+    convex combination of data z (``|z| <= s = z_abs_max``), and the
+    perturbed denominator ``>= (1 - eps2h) * D``:
+
+        |z_ff - z| / s <= (2*eps2 + eta * z_dev_max/s) * (1+tau)^A / (1 - eps2h),
+        eps2h = eps2 * (1+tau)^A.
+
+    Returns ``inf`` when ``tau >= 1`` or ``eps2h >= 1`` (radius too small for
+    any guarantee).  ``z_dev_max = 0`` (constant z per cell — e.g. one point
+    per cell) collapses the model to the pure second-order term, and
+    ``e_max = 0`` to exactly 0.
+    """
+    if radius <= 0:
+        return math.inf
+    tau = e_max / (radius * cell_min) if cell_min > 0 else math.inf
+    if tau >= 1.0:
+        return math.inf
+    grow = (1.0 + tau) ** a_max
+    eps2 = 0.5 * a_max * (a_max + 1.0) * tau * tau * (1.0 - tau) ** (-a_max - 2.0)
+    eps2h = eps2 * grow
+    if eps2h >= 1.0:
+        return math.inf
+    eta = (1.0 - tau) ** (-a_max) - 1.0
+    g = z_dev_max / z_abs_max if z_abs_max > 0 else 0.0
+    return (2.0 * eps2 + eta * g) * grow / (1.0 - eps2h)
+
+
+def _bound_at_radius(grid: UniformGrid, params: AIDWParams, agg, radius: int):
+    """Proved worst-case bound at a given near radius — the ONE source of
+    truth shared by the auto chooser and the ``farfield_radius=`` override.
+    A radius >= max(gx, gy) makes every near rectangle span the whole grid
+    (the far set is empty), so the bound is exactly 0 there."""
+    if radius >= max(grid.gx, grid.gy):
+        return 0.0
+    cell_min = float(jnp.minimum(grid.cell_size[0], grid.cell_size[1]))
+    return _farfield_bound_model(radius, cell_min, float(max(params.alpha_levels)),
+                                 agg.e_max, agg.z_dev_max, agg.z_abs_max)
+
+
+def _choose_farfield_radius(grid: UniformGrid, params: AIDWParams,
+                            farfield_rtol: float, agg, *, side: int, m: int):
+    """Near-field radius from the worst-case error model + a cost cap.
+
+    Returns ``(radius, bound)`` — concrete int/float.  Picks the smallest
+    radius whose :func:`_farfield_bound_model` value meets ``farfield_rtol``,
+    subject to a profitability cap: the modeled Phase-2 work (near window
+    occupancy + one term per cell) must stay under ``m / 4``, else the
+    far-field split would not beat the exact m-point sweep it replaces.  If
+    the target is not provable under the cap — the common case for tight
+    rtols, since a single-level aggregate's worst-case bound is second-order
+    in (cell dispersion / near distance) and the worst query sits right at
+    the near boundary — the cap radius is used and a warning reports the
+    honest bound; measured error (``core.accuracy.farfield_error_report``)
+    is typically orders of magnitude below it.  A radius beyond
+    ``max(gx, gy)`` would make every near rectangle span the whole grid
+    (the far set is empty and the "approximation" is the exact sweep with
+    gather overhead), so radii are also clamped there, with bound 0.
+    """
+    cover = max(grid.gx, grid.gy)
+    occ_mean = max(m / max(grid.n_cells, 1), 1.0)
+
+    def modeled_cost(radius):
+        window = min(side + 2 * radius + 1, cover)
+        return window * window * occ_mean + grid.n_cells
+
+    def bound_at(radius):
+        return _bound_at_radius(grid, params, agg, radius)
+
+    r_cap = 1
+    while r_cap + 1 < cover and modeled_cost(r_cap + 1) <= m / 4:
+        r_cap += 1
+    for radius in range(1, r_cap + 1):
+        bound = bound_at(radius)
+        if bound <= farfield_rtol:
+            return radius, bound
+    # Not provable under the cap.  Fall back to the CHEAPEST radius whose
+    # bound is at least non-vacuous (a relative-error promise above ~0.5 of
+    # the data scale guarantees nothing useful, and larger radii buy only
+    # marginally tighter worst cases at near-linear extra cost); r_cap if
+    # even that is out of reach.
+    radius = r_cap
+    for r in range(1, r_cap + 1):
+        if bound_at(r) <= _FALLBACK_BOUND_CEIL:
+            radius = r
+            break
+    bound = bound_at(radius)
+    warnings.warn(
+        f"farfield_rtol={farfield_rtol:g} is not provable within the "
+        f"profitable near-field budget (radius <= {r_cap} of a "
+        f"{grid.gx}x{grid.gy} grid); using radius {radius} with worst-case "
+        f"bound {bound:.3g}. Measured error is typically far below the "
+        "bound — check farfield_error_report, or pass farfield_radius= / a "
+        "coarser grid to trade speed for guarantee.",
+        stacklevel=4,
+    )
+    return radius, bound
 
 
 def _choose_seam_level(grid: UniformGrid, window: int) -> int:
@@ -171,7 +326,8 @@ def _choose_seam_level(grid: UniformGrid, window: int) -> int:
 
 
 def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
-               query_occupancy, seam_level):
+               query_occupancy, seam_level, phase2, farfield_rtol,
+               farfield_radius):
     """Grid-impl plan: snapshot + static capacity + block_d autotune."""
     m = int(dx.shape[0])
     dtype = jnp.asarray(dx).dtype
@@ -183,7 +339,7 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
     rebuilds = 0
     while True:
         r_need = required_radius_table(grid, params.k)
-        capacity, r_static, window = _choose_candidate_capacity(
+        capacity, r_static, window, side = _choose_candidate_capacity(
             grid, r_need, block_q, m, query_occupancy
         )
         pathological = grid.n_cells > 1 and r_static > _MAX_SAFE_RADIUS
@@ -214,7 +370,8 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
     if seam_level is None:
         seam_level = _choose_seam_level(grid, window)
 
-    # Phase-2 full-data sweep: sentinel-pad to its own tile multiple
+    # Phase-2 full-data sweep: sentinel-pad to its own tile multiple (kept on
+    # farfield plans too — it is the exact arm of the overflow fallback)
     bd2 = min(block_d, max(128, _round_up(m, 128)))
     big = coord_sentinel(dtype)
     data = (
@@ -222,9 +379,47 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
         pad_to(jnp.asarray(dy), bd2, big)[None, :],
         pad_to(jnp.asarray(dz), bd2, jnp.zeros((), dtype))[None, :],
     )
+
+    ff = dict(farfield_radius=0, farfield_bound=0.0, p2_capacity=0,
+              p2_block_d=0, p2_far_block_d=0, far=())
+    if phase2 == "farfield":
+        agg = cell_aggregates(grid)
+        if farfield_radius is not None:  # user override: radius as given
+            radius = max(1, min(int(farfield_radius), max(grid.gx, grid.gy)))
+            bound = _bound_at_radius(grid, params, agg, radius)
+        else:
+            radius, bound = _choose_farfield_radius(
+                grid, params, farfield_rtol, agg, side=side, m=m
+            )
+        # near-field capacity: same densest-window model as Phase 1, with the
+        # block's home bbox expanded by the near radius instead of r_safe
+        window2 = min(side + 2 * radius + 1, max(grid.gx, grid.gy))
+        cap2 = min(_densest_window_count(grid, window2), m)
+        # Phase-2 tiles are autotuned independently of block_d: the near row
+        # is narrow (<= capacity, vs m for the full sweep), so the widest
+        # tile that keeps the (block_q x tile) distance/weight tile within a
+        # ~1 MiB VMEM budget covers it in the fewest grid steps — per-step
+        # overhead, not FLOPs, dominates both interpret mode and short grids
+        tile_cap = max(512, _round_up(_P2_TILE_ELEMS // block_q, 128))
+        p2_block_d = min(tile_cap, max(128, _round_up(cap2, 128)))
+        p2_capacity = _round_up(cap2, p2_block_d)
+        far_bd = min(tile_cap, _round_up(grid.n_cells, 128))
+        zero = jnp.zeros((), dtype)
+        far = (
+            pad_to(agg.cent_x, far_bd, big)[None, :],
+            pad_to(agg.cent_y, far_bd, big)[None, :],
+            pad_to(agg.count, far_bd, zero)[None, :],
+            pad_to(agg.z_sum, far_bd, zero)[None, :],
+            pad_to(agg.ix, far_bd, jnp.asarray(-1, jnp.int32))[None, :],
+            pad_to(agg.iy, far_bd, jnp.asarray(-1, jnp.int32))[None, :],
+        )
+        ff = dict(farfield_radius=radius, farfield_bound=float(bound),
+                  p2_capacity=p2_capacity, p2_block_d=p2_block_d,
+                  p2_far_block_d=far_bd, far=far)
+
     return dict(block_d=bd2, cand_capacity=cand_capacity, cand_block_d=cand_block_d,
                 grid_rebuilds=rebuilds, seam_level=int(seam_level),
-                data=data, grid=grid, r_need=r_need)
+                data=data, grid=grid, r_need=r_need, **ff)
 
 
 def build_plan(
@@ -245,6 +440,9 @@ def build_plan(
     query_occupancy: float | None = None,
     seam_level: int | None = None,
     pipeline: str = "prefetch",
+    phase2: str = "exact",
+    farfield_rtol: float = 1e-3,
+    farfield_radius: int | None = None,
 ) -> InterpolationPlan:
     """Build an :class:`InterpolationPlan` from a dataset + configuration.
 
@@ -270,6 +468,24 @@ def build_plan(
     scalar-prefetch indexed tile table — sparse blocks skip their
     all-sentinel candidate tiles) or "dense" (every block walks the full
     static capacity; the conservative fallback, bit-identical results).
+    ``phase2`` (grid impl) selects the Phase-2 sweep: "exact" (default; the
+    full m-point weighted sweep, bit-identical to every prior release) or
+    "farfield" (exact per-point weights only inside a plan-chosen near-field
+    radius, one aggregate term per far cell beyond it — the first
+    *approximating* path; its worst-case relative error, proved by the
+    model in :func:`_choose_farfield_radius` and enforced by
+    ``tests/engine/test_farfield.py``, is reported as
+    ``plan.farfield_bound``.  The bound meets ``farfield_rtol`` when that
+    is provable at a profitable radius; otherwise the plan WARNS and
+    ``farfield_bound`` is the honest, larger worst case — always check it
+    rather than assuming the request was met).
+    ``farfield_rtol`` is the requested relative-error ceiling, measured
+    against ``max|z_data|`` (see ``core.accuracy.farfield_error_report``);
+    when it is not provable at a profitable radius the plan warns and
+    reports the honest (larger) bound.  ``farfield_radius`` overrides the
+    model's radius choice directly (the bound is still computed and
+    reported for the chosen radius — possibly ``inf`` for radii too small
+    to prove anything).
     """
     valid_impls = _DENSE_IMPLS + ("grid", "idw", "chunked")
     if impl not in valid_impls:
@@ -287,6 +503,15 @@ def build_plan(
         raise ValueError(f"pipeline must be 'prefetch' or 'dense', got {pipeline!r}")
     if seam_level is not None and not (0 <= int(seam_level) <= 8):
         raise ValueError(f"seam_level must be in [0, 8], got {seam_level!r}")
+    if phase2 not in ("exact", "farfield"):
+        raise ValueError(f"phase2 must be 'exact' or 'farfield', got {phase2!r}")
+    if phase2 == "farfield" and impl != "grid":
+        raise ValueError("phase2='farfield' requires impl='grid' (the cell "
+                         "aggregates live on the grid snapshot)")
+    if not float(farfield_rtol) > 0.0:
+        raise ValueError(f"farfield_rtol must be > 0, got {farfield_rtol!r}")
+    if farfield_radius is not None and int(farfield_radius) < 1:
+        raise ValueError(f"farfield_radius must be >= 1, got {farfield_radius!r}")
 
     m = int(dx.shape[0])
     if impl != "idw" and m < params.k:
@@ -308,7 +533,10 @@ def build_plan(
         knn=knn, q_chunk=q_chunk, d_chunk=d_chunk, idw_alpha=float(idw_alpha),
         cand_capacity=0, cand_block_d=0, grid_rebuilds=0,
         seam_level=0, pipeline=pipeline,
-        data=(), grid=None, r_need=None,
+        phase2=phase2, farfield_rtol=float(farfield_rtol),
+        farfield_radius=0, farfield_bound=0.0,
+        p2_capacity=0, p2_block_d=0, p2_far_block_d=0,
+        data=(), grid=None, r_need=None, far=(),
     )
 
     if impl == "grid":
@@ -316,6 +544,8 @@ def build_plan(
             dx, dy, dz, params=params, block_q=block_q, block_d=block_d,
             grid=grid, target_occupancy=target_occupancy,
             query_occupancy=query_occupancy, seam_level=seam_level,
+            phase2=phase2, farfield_rtol=float(farfield_rtol),
+            farfield_radius=farfield_radius,
         ))
     elif impl == "chunked":
         if knn == "grid" and grid is None:

@@ -73,6 +73,18 @@ def alpha_from_best(best, m_real: int, area: float, params: AIDWParams, data_axi
     return adaptive_alpha(r_obs, m_real, area, params)
 
 
+def pow_weight(d2, alpha_half):
+    """The AIDW weight ``(d^2)^(-alpha/2) = d^(-alpha)`` from a squared
+    distance, with the dtype-dependent tiny clamp (exact hits are handled by
+    the callers' min-d² guard; sentinel distances overflow to +inf and yield
+    weight 0).  The ONE kernel-side definition — the far-field aggregate arm
+    must weigh centroids exactly as the near/full sweeps weigh points, or
+    the proved error budget silently breaks."""
+    dtype = d2.dtype
+    tiny = jnp.asarray(1e-30 if dtype == jnp.float32 else 1e-290, dtype)
+    return jnp.exp(-alpha_half * jnp.log(jnp.maximum(d2, tiny)))
+
+
 def weight_tile(d2, dz, alpha_half, data_axis: int):
     """One tile of the weighting pass: returns (sum_w, sum_wz, tile_min, tile_hit_z),
     all keepdims along ``data_axis``.
@@ -81,9 +93,7 @@ def weight_tile(d2, dz, alpha_half, data_axis: int):
     is the per-query half-power ((bn,1)/(1,bn)).
     """
     ax = data_axis
-    dtype = d2.dtype
-    tiny = jnp.asarray(1e-30 if dtype == jnp.float32 else 1e-290, dtype)
-    w = jnp.exp(-alpha_half * jnp.log(jnp.maximum(d2, tiny)))
+    w = pow_weight(d2, alpha_half)
     sum_w = jnp.sum(w, axis=ax, keepdims=True)
     sum_wz = jnp.sum(w * dz, axis=ax, keepdims=True)
     tile_min = jnp.min(d2, axis=ax, keepdims=True)

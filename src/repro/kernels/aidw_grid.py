@@ -28,8 +28,22 @@ of ``(snapshot arrays, queries, static capacity)`` and runs under ``jax.jit``:
   walks every tile with the same kernel body as the tiled version
   (``_knn_kernel_soa``).  Either way per-query work is O(|neighbourhood|)
   instead of O(m).
-* :func:`phase2_weights_full` — Phase 2 unchanged: AIDW weights ALL m data
-  points, so the full-data sweep (``_weight_kernel_soa``) is reused verbatim.
+* :func:`phase2_weights_full` — exact Phase 2 (the default): AIDW weights
+  ALL m data points, so the full-data sweep (``_weight_kernel_soa``) is
+  reused verbatim.
+* :func:`phase2_near_weights` + :func:`phase2_far_aggregates` — the
+  far-field approximated Phase 2 (``build_plan(phase2="farfield")``,
+  DESIGN.md §7).  The near kernel sweeps exact per-point weights over the
+  block's near-rectangle candidate rows (same CSR gather, same
+  scalar-prefetch tile table as Phase 1 — sparse blocks skip their
+  all-sentinel tail tiles) and returns the four partial accumulators
+  ``(sum_w, sum_wz, min_d2, hit_z)`` instead of a finished z.  The far
+  kernel sweeps the plan's per-cell aggregates (count, z-sum, centroid)
+  once per cell, masking cells inside the block's scalar-prefetched near
+  rectangle (those are covered exactly), and folds ``count*w(centroid)`` /
+  ``z_sum*w(centroid)`` into ``(sum_w, sum_wz)``.  The engine combines the
+  two and applies the exact-hit guard; the worst-case relative error is
+  bounded at plan time (``engine.plan._choose_farfield_radius``).
 
 Morton sorting, seam splitting, padding, the per-block overflow blend and
 the unsort live in ``repro.engine.execute``; this module is only the kernel
@@ -47,7 +61,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.aidw import AIDWParams
 from repro.core.grid import UniformGrid
-from repro.kernels._common import alpha_from_best, merge_k_best, sq_dist_tile
+from repro.kernels._common import (
+    alpha_from_best,
+    merge_k_best,
+    pow_weight,
+    sq_dist_tile,
+    weight_tile,
+)
 from repro.kernels.aidw_tiled import _SEMANTICS, _knn_kernel_soa, _weight_kernel_soa
 
 
@@ -73,7 +93,8 @@ def block_rectangles(grid: UniformGrid, cx, cy, r_safe, block_q: int):
     return xlo, xhi, ylo, yhi
 
 
-def gather_candidates_csr(grid: UniformGrid, xlo, xhi, ylo, yhi, capacity: int):
+def gather_candidates_csr(grid: UniformGrid, xlo, xhi, ylo, yhi, capacity: int,
+                          with_z: bool = False):
     """Traced per-block candidate gather from the CSR snapshot, static width.
 
     Each rectangle row ``(y, xlo..xhi)`` maps to the contiguous CSR run
@@ -87,6 +108,9 @@ def gather_candidates_csr(grid: UniformGrid, xlo, xhi, ylo, yhi, capacity: int):
     Returns ``(cand_x, cand_y, need)``: candidates ``(nb, capacity)`` and the
     true per-block candidate count ``need (nb,)``.  ``need > capacity`` means
     this gather is incomplete and the caller must use the exact fallback.
+    ``with_z=True`` additionally gathers the attribute rows (sentinel slot
+    z = 0, i.e. weightless) and returns ``(cand_x, cand_y, cand_z, need)`` —
+    the far-field Phase 2 needs the z values of its near field.
     """
     nb = xlo.shape[0]
     gx, gy = grid.gx, grid.gy
@@ -112,7 +136,26 @@ def gather_candidates_csr(grid: UniformGrid, xlo, xhi, ylo, yhi, capacity: int):
     m = grid.n_points
     valid = s < jnp.minimum(need, capacity)[:, None]
     idx = jnp.where(valid, jnp.clip(idx, 0, m - 1), m)               # m = sentinel slot
+    if with_z:
+        return grid.pt_x[idx], grid.pt_y[idx], grid.pt_z[idx], need
     return grid.pt_x[idx], grid.pt_y[idx], need
+
+
+# Index maps shared by the scalar-prefetch pipelines (Phase-1 skip, Phase-2
+# near, Phase-2 far); the first argument after (i, j) is the prefetched
+# scalar ref, unused by the query/output maps.
+def _pf_query_map(i, j, _scalar):
+    return (i, 0)
+
+
+def _pf_clamped_tile_map(i, j, nt):
+    # clamp past-need steps to the block's last real tile: Pallas skips the
+    # DMA for a revisited block index, the kernel skips the merge
+    return (i, jnp.maximum(jnp.minimum(j, nt[i] - 1), 0))
+
+
+def _pf_shared_tile_map(i, j, _scalar):
+    return (0, j)
 
 
 def _knn_kernel_skip(nt_ref, qx_ref, qy_ref, dx_ref, dy_ref, alpha_ref, best,
@@ -183,24 +226,16 @@ def phase1_alpha_from_candidates(
             interpret=interpret,
         )(qx2, qy2, cand_x, cand_y)
 
-    def q_map(i, j, nt):
-        return (i, 0)
-
-    def c_map(i, j, nt):
-        # clamp past-need steps to the block's last real tile: Pallas skips
-        # the DMA for a revisited block index, the kernel skips the merge
-        return (i, jnp.maximum(jnp.minimum(j, nt[i] - 1), 0))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, c_tot // block_d),
         in_specs=[
-            pl.BlockSpec((block_q, 1), q_map),
-            pl.BlockSpec((block_q, 1), q_map),
-            pl.BlockSpec((1, block_d), c_map),
-            pl.BlockSpec((1, block_d), c_map),
+            pl.BlockSpec((block_q, 1), _pf_query_map),
+            pl.BlockSpec((block_q, 1), _pf_query_map),
+            pl.BlockSpec((1, block_d), _pf_clamped_tile_map),
+            pl.BlockSpec((1, block_d), _pf_clamped_tile_map),
         ],
-        out_specs=pl.BlockSpec((block_q, 1), q_map),
+        out_specs=pl.BlockSpec((block_q, 1), _pf_query_map),
         scratch_shapes=scratch,
     )
     return pl.pallas_call(
@@ -210,6 +245,145 @@ def phase1_alpha_from_candidates(
         compiler_params=_SEMANTICS,
         interpret=interpret,
     )(num_tiles.astype(jnp.int32), qx2, qy2, cand_x, cand_y)
+
+
+def _near_weight_kernel(nt_ref, qx_ref, qy_ref, ah_ref, dx_ref, dy_ref, dz_ref,
+                        sw_ref, swz_ref, md_ref, hz_ref,
+                        acc_w, acc_wz, min_d2, hit_z):
+    """Near-field half of the far-field Phase 2: ``_weight_kernel_soa`` over
+    per-block candidate rows, with the Phase-1 tile-table skip (steps past
+    ``nt_ref[i]`` are clamped revisits, the accumulation is predicated off)
+    — and the four accumulators written out instead of a finished z, so the
+    engine can fold in the far-cell terms before dividing."""
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_w[...] = jnp.zeros(acc_w.shape, acc_w.dtype)
+        acc_wz[...] = jnp.zeros(acc_wz.shape, acc_wz.dtype)
+        min_d2[...] = jnp.full(min_d2.shape, jnp.inf, min_d2.dtype)
+        hit_z[...] = jnp.zeros(hit_z.shape, hit_z.dtype)
+
+    @pl.when(j < nt_ref[i])
+    def _accumulate():
+        d2 = sq_dist_tile(qx_ref[...], qy_ref[...], dx_ref[...], dy_ref[...])
+        sw, swz, tmin, thz = weight_tile(d2, dz_ref[...], ah_ref[...], data_axis=1)
+        acc_w[...] += sw
+        acc_wz[...] += swz
+        better = tmin < min_d2[...]
+        hit_z[...] = jnp.where(better, thz, hit_z[...])
+        min_d2[...] = jnp.where(better, tmin, min_d2[...])
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        sw_ref[...] = acc_w[...]
+        swz_ref[...] = acc_wz[...]
+        md_ref[...] = min_d2[...]
+        hz_ref[...] = hit_z[...]
+
+
+def phase2_near_weights(
+    qx_s, qy_s, alpha_half, cand_x, cand_y, cand_z, num_tiles, *,
+    block_q: int, block_d: int, interpret: bool,
+):
+    """Exact near-field weight sweep over per-block candidate rows.
+
+    qx_s/qy_s/alpha_half: (n_tot,) / (n_tot, 1), ``n_tot % block_q == 0``;
+    cand_*: (nb, c_tot) near-rectangle candidates, ``c_tot % block_d == 0``;
+    num_tiles: (nb,) int32 per-block real-tile count (the scalar-prefetch
+    tile table; pass the full tile count for a dense walk — bit-identical,
+    the skipped tiles are all-sentinel).
+
+    Returns ``(sum_w, sum_wz, min_d2, hit_z)``, each ``(n_tot, 1)``.
+    """
+    n_tot = qx_s.shape[0]
+    nb, c_tot = cand_x.shape
+    dtype = qx_s.dtype
+    qx2, qy2 = qx_s[:, None], qy_s[:, None]
+    q_spec = pl.BlockSpec((block_q, 1), _pf_query_map)
+    c_spec = pl.BlockSpec((1, block_d), _pf_clamped_tile_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, c_tot // block_d),
+        in_specs=[q_spec, q_spec, q_spec, c_spec, c_spec, c_spec],
+        out_specs=[q_spec] * 4,
+        scratch_shapes=[pltpu.VMEM((block_q, 1), dtype) for _ in range(4)],
+    )
+    return pl.pallas_call(
+        _near_weight_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_tot, 1), dtype)] * 4,
+        compiler_params=_SEMANTICS,
+        interpret=interpret,
+    )(num_tiles.astype(jnp.int32), qx2, qy2, alpha_half, cand_x, cand_y, cand_z)
+
+
+def _far_cell_kernel(rect_ref, qx_ref, qy_ref, ah_ref, fx_ref, fy_ref,
+                     fix_ref, fiy_ref, fcnt_ref, fzs_ref,
+                     sw_ref, swz_ref, acc_w, acc_wz):
+    """Far-field half: one aggregate term per cell OUTSIDE the block's near
+    rectangle (scalar-prefetched as ``rect_ref[i] = (xlo, xhi, ylo, yhi)``).
+
+    Each far cell contributes ``count * w(d_centroid)`` to Σw and
+    ``z_sum * w(d_centroid)`` to Σw·z.  Cells inside the rectangle are
+    masked to 0 — their points were swept exactly by the near kernel — and
+    pad cells carry sentinel centroids (w = 0) AND count = z_sum = 0.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_w[...] = jnp.zeros(acc_w.shape, acc_w.dtype)
+        acc_wz[...] = jnp.zeros(acc_wz.shape, acc_wz.dtype)
+
+    d2 = sq_dist_tile(qx_ref[...], qy_ref[...], fx_ref[...], fy_ref[...])
+    w = pow_weight(d2, ah_ref[...])
+    inside = ((fix_ref[...] >= rect_ref[i, 0]) & (fix_ref[...] <= rect_ref[i, 1])
+              & (fiy_ref[...] >= rect_ref[i, 2]) & (fiy_ref[...] <= rect_ref[i, 3]))
+    w = jnp.where(inside, jnp.zeros((), d2.dtype), w)
+    acc_w[...] += jnp.sum(w * fcnt_ref[...], axis=1, keepdims=True)
+    acc_wz[...] += jnp.sum(w * fzs_ref[...], axis=1, keepdims=True)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        sw_ref[...] = acc_w[...]
+        swz_ref[...] = acc_wz[...]
+
+
+def phase2_far_aggregates(
+    qx_s, qy_s, alpha_half, rects, far, *,
+    block_q: int, block_d: int, interpret: bool,
+):
+    """Far-field aggregate sweep: every cell of the grid, one term each.
+
+    rects: (nb, 4) int32 per-block near rectangles (inclusive cell bounds,
+    masked out of the far sum); far: the plan's padded ``(1, ncp)`` arrays
+    ``(cent_x, cent_y, count, z_sum, ix, iy)``, ``ncp % block_d == 0``.
+
+    Returns ``(sum_w_far, sum_wz_far)``, each ``(n_tot, 1)``.
+    """
+    n_tot = qx_s.shape[0]
+    nb = rects.shape[0]
+    dtype = qx_s.dtype
+    fx, fy, fcnt, fzs, fix, fiy = far
+    ncp = fx.shape[1]
+    qx2, qy2 = qx_s[:, None], qy_s[:, None]
+    q_spec = pl.BlockSpec((block_q, 1), _pf_query_map)
+    c_spec = pl.BlockSpec((1, block_d), _pf_shared_tile_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, ncp // block_d),
+        in_specs=[q_spec, q_spec, q_spec] + [c_spec] * 6,
+        out_specs=[q_spec] * 2,
+        scratch_shapes=[pltpu.VMEM((block_q, 1), dtype) for _ in range(2)],
+    )
+    return pl.pallas_call(
+        _far_cell_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_tot, 1), dtype)] * 2,
+        compiler_params=_SEMANTICS,
+        interpret=interpret,
+    )(rects.astype(jnp.int32), qx2, qy2, alpha_half, fx, fy, fix, fiy, fcnt, fzs)
 
 
 def phase2_weights_full(

@@ -104,6 +104,9 @@ def aidw(
     block_d: int = 512,
     interpret: bool | None = None,
     grid=None,
+    phase2: str = "exact",
+    farfield_rtol: float = 1e-3,
+    farfield_radius: int | None = None,
 ):
     """AIDW via the Pallas kernels.  Returns ``(z_hat, alpha)``, shape (n,).
 
@@ -115,6 +118,9 @@ def aidw(
     (threshold-skip kNN pass; use ``repro.engine.execute_with_stats`` for its
     merge-fraction diagnostic).
     ``layout``: "soa" | "aoas" — layout of the streamed data-point array.
+    ``phase2``/``farfield_rtol``/``farfield_radius`` (impl="grid" only)
+    select the far-field approximated Phase 2 with its plan-time error
+    budget — see :func:`repro.engine.build_plan`.
 
     Repeat calls with the *same* ``dx/dy/dz`` array objects reuse a memoized
     plan (keyed on array identity, not contents): don't mutate data arrays
@@ -131,6 +137,8 @@ def aidw(
         dx, dy, dz,
         params=params, area=area, impl=impl, layout=layout,
         block_q=block_q, block_d=block_d, interpret=interpret, grid=grid,
+        phase2=phase2, farfield_rtol=farfield_rtol,
+        farfield_radius=farfield_radius,
     )
     return execute(plan, qx, qy)
 

@@ -2,6 +2,19 @@ import numpy as np
 import pytest
 
 
+def require_hypothesis():
+    """The one importorskip preamble for hypothesis-gated tests.
+
+    Call at module top (before ``from hypothesis import ...``) or inside a
+    test body.  Returns the imported module.  CI installs the ``dev`` extra
+    and guards the suite's skip count, so these tests can never silently
+    stop running there; local runs without the extra skip them.
+    """
+    return pytest.importorskip(
+        "hypothesis", reason="dev extra not installed (pip install -e .[dev])"
+    )
+
+
 def make_points(m, n, seed=0, clustered=True, dtype=np.float32):
     """Test point sets. Clustered data exercises the full alpha range
     (uniform-random data saturates R(S0) > R_max => alpha == a5)."""

@@ -13,6 +13,8 @@ plus the extended execute_with_stats diagnostics (static dict structure,
 no retrace) and the convenience-API plan memoization in kernels.ops.
 """
 
+import warnings
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -26,7 +28,7 @@ RTOL, ATOL = 2e-4, 2e-5
 
 STATS_KEYS = {
     "grid_fallback", "cand_need_max", "overflow_blocks", "overflow_queries",
-    "overflow_query_mask", "skipped_tile_fraction",
+    "overflow_query_mask", "skipped_tile_fraction", "persistent_overflow",
 }
 
 
@@ -243,6 +245,74 @@ def test_stats_structure_static_per_plan():
     assert set(stats1) == set(stats2) == STATS_KEYS
     assert stats1["overflow_query_mask"].shape == (300,)
     assert 0.0 <= float(stats1["skipped_tile_fraction"]) <= 1.0
+
+
+def test_persistent_overflow_counter_and_warning():
+    """ROADMAP capacity-model regression: a deterministic sparse batch whose
+    overflow_queries persists across repeated execute_with_stats calls must
+    raise the persistent_overflow flag (and a one-shot RuntimeWarning
+    suggesting a re-plan) once the streak reaches the threshold — the hook
+    the future per-batch capacity re-estimator builds on.  A clean batch
+    resets the streak; a fresh plan starts from zero."""
+    from repro.engine.execute import PERSISTENT_OVERFLOW_BATCHES
+
+    dx, dy, dz = _uniform(4096, 19)
+    p = AIDWParams(k=10, area=1.0, r_max=64.0)
+    rng = np.random.default_rng(20)
+    # deterministic sparse out-of-bbox batch: overflows the tight capacity
+    qx = jnp.asarray((rng.random(64) * 6 - 3).astype(np.float32))
+    qy = jnp.asarray((rng.random(64) * 6 - 3).astype(np.float32))
+    # clean batch: tile-local (compact block rectangle fits the capacity)
+    qcx = jnp.asarray((0.4 + 0.05 * rng.random(64)).astype(np.float32))
+    qcy = jnp.asarray((0.4 + 0.05 * rng.random(64)).astype(np.float32))
+    plan = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid",
+                      query_occupancy=64.0)
+
+    assert PERSISTENT_OVERFLOW_BATCHES == 3
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the first two batches must NOT warn
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES - 1):
+            _, _, stats = execute_with_stats(plan, qx, qy)
+            assert int(stats["overflow_queries"]) > 0
+            assert stats["persistent_overflow"] is False
+    with pytest.warns(RuntimeWarning, match="re-plan"):
+        _, _, stats = execute_with_stats(plan, qx, qy)
+    assert stats["persistent_overflow"] is True
+    # further overflowing batches keep the flag without re-warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _, _, stats = execute_with_stats(plan, qx, qy)
+    assert stats["persistent_overflow"] is True
+    # one clean batch resets the streak
+    _, _, stats = execute_with_stats(plan, qcx, qcy)
+    assert int(stats["overflow_queries"]) == 0
+    assert stats["persistent_overflow"] is False
+    # plan identity scopes the streak: a fresh plan starts clean
+    plan2 = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid",
+                       query_occupancy=64.0)
+    _, _, stats = execute_with_stats(plan2, qx, qy)
+    assert stats["persistent_overflow"] is False
+
+
+def test_execute_with_stats_composes_under_outer_jit():
+    """Wrapping execute_with_stats in an outer jax.jit must keep working
+    (pre-tracking behaviour): the host-side streak bookkeeping is skipped
+    under a trace — the stats are tracers there — instead of raising."""
+    import jax
+
+    dx, dy, dz = _uniform(1024, 21)
+    p = AIDWParams(k=10, area=1.0)
+    plan = build_plan(dx, dy, dz, params=p, area=1.0, impl="grid")
+    rng = np.random.default_rng(22)
+    qx = jnp.asarray(rng.random(100).astype(np.float32))
+    qy = jnp.asarray(rng.random(100).astype(np.float32))
+    z_j, a_j, stats_j = jax.jit(
+        lambda x, y: execute_with_stats(plan, x, y))(qx, qy)
+    assert "persistent_overflow" not in stats_j
+    z_e, a_e, stats_e = execute_with_stats(plan, qx, qy)
+    assert "persistent_overflow" in stats_e
+    np.testing.assert_array_equal(np.asarray(z_j), np.asarray(z_e))
+    np.testing.assert_array_equal(np.asarray(a_j), np.asarray(a_e))
 
 
 # --------------------------------------------------- convenience plan memoization

@@ -1,0 +1,50 @@
+"""Regenerate the committed golden-oracle fixture ``aidw_golden.npz``.
+
+Two seeded batches (uniform + clustered data, uniform queries) with
+Kahan-compensated reference interpolants and alphas
+(``core.accuracy.aidw_interpolate_kahan`` — ~f64-quality accumulation at
+f32 cost).  ``tests/test_golden.py`` asserts every EXACT impl reproduces
+these values within dtype-appropriate tolerance, pinning the whole impl
+family to one absolute reference across PRs (pairwise parity tests cannot
+see a drift that moves two impls together).
+
+Run from the repo root (only when the reference semantics intentionally
+change — note it in the PR):
+
+    PYTHONPATH=src python tests/fixtures/make_golden.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # conftest
+from conftest import make_points  # noqa: E402
+
+from repro.core.accuracy import aidw_interpolate_kahan  # noqa: E402
+from repro.core.aidw import AIDWParams  # noqa: E402
+
+M, N, K = 900, 320, 10
+OUT = os.path.join(os.path.dirname(__file__), "aidw_golden.npz")
+
+
+def main():
+    params = AIDWParams(k=K, area=1.0)
+    blobs = {"k": np.int32(K), "area": np.float32(1.0)}
+    for name, clustered, seed in (("uniform", False, 101), ("clustered", True, 202)):
+        dx, dy, dz, qx, qy = make_points(M, N, seed=seed, clustered=clustered)
+        z_ref, a_ref = aidw_interpolate_kahan(
+            dx, dy, dz, qx, qy, params, area=1.0, q_chunk=64, d_chunk=128
+        )
+        blobs.update({
+            f"{name}_dx": dx, f"{name}_dy": dy, f"{name}_dz": dz,
+            f"{name}_qx": qx, f"{name}_qy": qy,
+            f"{name}_z": np.asarray(z_ref), f"{name}_alpha": np.asarray(a_ref),
+        })
+    np.savez_compressed(OUT, **blobs)
+    print(f"wrote {OUT} ({os.path.getsize(OUT)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

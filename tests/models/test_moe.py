@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="dev extra not installed (pip install -e .[dev])")
+from conftest import require_hypothesis
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS, smoke

@@ -3,7 +3,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-pytest.importorskip("hypothesis", reason="dev extra not installed (pip install -e .[dev])")
+from conftest import require_hypothesis
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

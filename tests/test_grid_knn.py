@@ -17,7 +17,7 @@ from repro.core.grid import (
     required_radius,
     safe_radius,
 )
-from conftest import make_points
+from conftest import make_points, require_hypothesis
 
 
 def _brute_knn(px, py, qx, qy, k):
@@ -161,9 +161,7 @@ def test_ring_expansion_never_misses_property():
     """Property: ring expansion NEVER misses a true neighbour — for arbitrary
     point sets, query positions (inside or outside the grid), k, and grid
     resolutions, grid_knn equals the brute-force k smallest distances."""
-    pytest.importorskip(
-        "hypothesis", reason="dev extra not installed (pip install -e .[dev])"
-    )
+    require_hypothesis()
     from hypothesis import given, settings, strategies as st
 
     finite = st.floats(-2.0, 3.0, allow_nan=False, width=32)

@@ -1,0 +1,43 @@
+"""CI guard: fail when the suite skips more tests than the environment should.
+
+The hypothesis-gated modules importorskip the `dev` extra; CI installs it,
+so in CI the expected skip count is 0.  Without this guard, a broken
+install step (or a future module that forgets the extra) silently stops the
+property tests from running — exactly what happened to the 4
+``require_hypothesis`` modules before PR 5 pinned it here.
+
+Usage: python tools/check_skip_count.py <junit-xml> <max-skips>
+"""
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def main(report_path: str, max_skips: int) -> int:
+    root = ET.parse(report_path).getroot()
+    skipped = []
+    for case in root.iter("testcase"):
+        if case.find("skipped") is not None:
+            node = case.find("skipped")
+            skipped.append(
+                f"{case.get('classname', '?')}::{case.get('name', '?')}"
+                f"  ({node.get('message', '')})"
+            )
+    print(f"skipped tests: {len(skipped)} (baseline allows {max_skips})")
+    for name in skipped:
+        print(f"  SKIPPED {name}")
+    if len(skipped) > max_skips:
+        print(
+            "ERROR: skip count exceeds the known-environment baseline — "
+            "is the dev extra (hypothesis) installed?",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], int(sys.argv[2])))
