@@ -119,10 +119,15 @@ def farfield_error_report(plan, qx, qy, *, q_chunk: int = 1024, d_chunk: int = 4
     error on the same scale the bound is stated on, ``max|z_data|``.
 
     Returns a dict: ``max_rel_err`` / ``rms_rel_err`` / ``max_abs_err``
-    (diffs in f64), ``scale``, ``bound`` (the plan's ``farfield_bound``; 0.0
-    for exact plans), ``fp_slack`` (see :data:`FP_SLACK_ULPS`), and
-    ``within_bound`` — ``max_rel_err <= bound + fp_slack``, the predicate
-    the error-budget tests (``tests/engine/test_farfield.py``) enforce.
+    (diffs in f64), ``scale``, ``phase2`` (which Phase-2 arm the plan runs
+    — the report covers all three: "exact" plans measure pure fp drift
+    against bound 0.0, "farfield" the single-level aggregate bound, and
+    "quadtree" the multi-level dipole bound of DESIGN.md §8), ``bound``
+    (the plan's ``farfield_bound``), ``fp_slack`` (see
+    :data:`FP_SLACK_ULPS`), and ``within_bound`` — ``max_rel_err <= bound
+    + fp_slack``, the predicate the error-budget tests
+    (``tests/engine/test_farfield.py``, ``tests/engine/test_quadtree.py``)
+    enforce.
     """
     import numpy as np
 
@@ -151,6 +156,7 @@ def farfield_error_report(plan, qx, qy, *, q_chunk: int = 1024, d_chunk: int = 4
         "rms_rel_err": float(np.sqrt(np.mean(diff**2)) / scale) if diff.size else 0.0,
         "max_abs_err": float(diff.max()) if diff.size else 0.0,
         "scale": scale,
+        "phase2": plan.phase2,
         "bound": bound,
         "fp_slack": fp_slack,
         "within_bound": max_rel <= bound + fp_slack,

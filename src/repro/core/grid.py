@@ -530,6 +530,168 @@ def cell_aggregates(grid: UniformGrid) -> CellAggregates:
                           z_dev_max, z_abs_max)
 
 
+class QuadtreeLevel(NamedTuple):
+    """One level of the far-field quadtree (plan-time, DESIGN.md §8).
+
+    Level 0 is the grid's cells themselves; level ``l`` nodes cover
+    ``2**l x 2**l`` cells (edge nodes cover the clipped remainder).  Each
+    level is one flat padded array set of ``nx * ny`` nodes in row-major
+    node order — no pointers, so the whole pyramid is a static-shape
+    pytree the plan can carry.
+
+    Per node: point ``count``, ``z_sum``, points centroid (``cent_x/y``,
+    geometric node centre when empty), the FIRST z-moment about the
+    centroid ``(mx, my) = sum_j z_j * (p_j - cent)`` (the dipole term that
+    cancels the z budget's first-order error — DESIGN.md §8), ``e`` (an
+    upper bound on the max point-to-centroid distance: exact at level 0,
+    combined upward as ``max_children(|cent_child - cent| + e_child)``)
+    and ``zd`` (same upward bound for the max |z_j - node z-mean|).
+
+    ``e_max`` / ``zd_max`` are the level maxima as concrete floats — the
+    plan's level-selection table is built from them.
+    """
+
+    nx: int              # nodes along x (= ceil(gx / 2**level))
+    ny: int              # nodes along y
+    step: int            # cells per node side (= 2**level)
+    cent_x: jnp.ndarray  # (nx*ny,) points centroid (node centre when empty)
+    cent_y: jnp.ndarray
+    count: jnp.ndarray   # (nx*ny,) point count, data dtype (kernel operand)
+    z_sum: jnp.ndarray   # (nx*ny,)
+    mx: jnp.ndarray      # (nx*ny,) first z-moment about the centroid, x
+    my: jnp.ndarray      # (nx*ny,) ... y
+    e: jnp.ndarray       # (nx*ny,) per-node dispersion radius (upper bound)
+    zd: jnp.ndarray      # (nx*ny,) per-node z-spread (upper bound)
+    e_max: float         # max of e over the level's nonempty nodes
+    zd_max: float        # max of zd over the level's nonempty nodes
+
+
+def quadtree_level_count(gx: int, gy: int) -> int:
+    """Static level count for :func:`quadtree_aggregates` — derived from the
+    grid resolution alone: coarsen by 2x per level until at most 2 nodes
+    remain per axis (a coarser root is never closeable: its opening gap
+    would exceed the grid)."""
+    levels = 1
+    g = max(gx, gy)
+    while (g + 1) // 2 > 2 and (1 << (levels - 1)) < g:
+        g = (g + 1) // 2
+        levels += 1
+    return levels
+
+
+def _node_centres(grid: UniformGrid, nx: int, ny: int, step: int, dtype):
+    """Geometric centres of level nodes (used for empty nodes only)."""
+    jx = jnp.arange(nx, dtype=jnp.int32)
+    jy = jnp.arange(ny, dtype=jnp.int32)
+    x_mid = 0.5 * (jx * step + jnp.minimum((jx + 1) * step, grid.gx)).astype(dtype)
+    y_mid = 0.5 * (jy * step + jnp.minimum((jy + 1) * step, grid.gy)).astype(dtype)
+    cx = (grid.origin[0] + x_mid * grid.cell_size[0]).astype(dtype)
+    cy = (grid.origin[1] + y_mid * grid.cell_size[1]).astype(dtype)
+    return (jnp.broadcast_to(cx[None, :], (ny, nx)),
+            jnp.broadcast_to(cy[:, None], (ny, nx)))
+
+
+def _pad_even(a, ny, nx, fill=0.0):
+    """Pad a (ny, nx) level image to even dims with ``fill`` (empty nodes)."""
+    return jnp.pad(a, ((0, ny % 2), (0, nx % 2)), constant_values=fill)
+
+
+def quadtree_aggregates(grid: UniformGrid) -> tuple[QuadtreeLevel, ...]:
+    """Bottom-up quadtree of far-field aggregates over the grid's points.
+
+    Eager-only by convention (plan time, like :func:`cell_aggregates`):
+    the per-level ``e_max`` / ``zd_max`` are concrete floats for the plan's
+    level-selection table.  Level 0 is computed exactly from the padded
+    cell layout; each coarser level combines 2x2 children with the exact
+    reductions for count / z-sum / centroid / z-moment (the property the
+    hypothesis re-aggregation test pins: a NumPy reduction of level ``l``
+    reproduces level ``l+1`` bit for bit) and conservative upward bounds
+    for the dispersion and z-spread radii:
+
+        e_parent  = max over nonempty children of |cent_c - cent| + e_c
+        zd_parent = max over nonempty children of |zbar_c - zbar| + zd_c
+
+    The z-moment combination is exact because ``sum_{j in c} z_j (p_j -
+    cent) = m_c + s_c (cent_c - cent)`` for each child c (``m_c`` its own
+    moment, ``s_c`` its z-sum).
+    """
+    nc = grid.n_cells
+    dtype = grid.pt_x.dtype
+    big = coord_sentinel(dtype)
+    agg = cell_aggregates(grid)
+    cx_cells = grid.cell_x[:nc]
+    cy_cells = grid.cell_y[:nc]
+    mask = cx_cells < big / 2
+    dev_x = jnp.where(mask, cx_cells - agg.cent_x[:, None], 0.0)
+    dev_y = jnp.where(mask, cy_cells - agg.cent_y[:, None], 0.0)
+    e0 = jnp.sqrt(jnp.max(dev_x * dev_x + dev_y * dev_y, axis=1))
+    z_cells = grid.cell_z[:nc]
+    mx0 = jnp.sum(jnp.where(mask, z_cells, 0.0) * dev_x, axis=1)
+    my0 = jnp.sum(jnp.where(mask, z_cells, 0.0) * dev_y, axis=1)
+    denom = jnp.maximum(agg.count, 1.0)
+    zbar0 = agg.z_sum / denom
+    zd0 = jnp.max(jnp.where(mask, jnp.abs(z_cells - zbar0[:, None]), 0.0), axis=1)
+
+    n_levels = quadtree_level_count(grid.gx, grid.gy)
+    levels = []
+    nx, ny, step = grid.gx, grid.gy, 1
+    cnt = agg.count.reshape(ny, nx)
+    zs = agg.z_sum.reshape(ny, nx)
+    ctx = agg.cent_x.reshape(ny, nx)
+    cty = agg.cent_y.reshape(ny, nx)
+    mx = mx0.reshape(ny, nx)
+    my = my0.reshape(ny, nx)
+    e = e0.reshape(ny, nx)
+    zd = zd0.reshape(ny, nx)
+    for level in range(n_levels):
+        nonempty = cnt > 0
+        e_max = float(jnp.max(jnp.where(nonempty, e, 0.0))) if nc else 0.0
+        zd_max = float(jnp.max(jnp.where(nonempty, zd, 0.0))) if nc else 0.0
+        levels.append(QuadtreeLevel(
+            nx=nx, ny=ny, step=step,
+            cent_x=ctx.reshape(-1), cent_y=cty.reshape(-1),
+            count=cnt.reshape(-1), z_sum=zs.reshape(-1),
+            mx=mx.reshape(-1), my=my.reshape(-1),
+            e=e.reshape(-1), zd=zd.reshape(-1),
+            e_max=e_max, zd_max=zd_max,
+        ))
+        if level == n_levels - 1:
+            break
+        children = [
+            [_pad_even(a, ny, nx)[dy_::2, dx_::2] for a in
+             (cnt, zs, ctx, cty, mx, my, e, zd)]
+            for dy_, dx_ in ((0, 0), (0, 1), (1, 0), (1, 1))
+        ]
+        nx, ny, step = (nx + 1) // 2, (ny + 1) // 2, step * 2
+        # exact reductions, fixed association order (the bitwise contract
+        # of the re-aggregation test): c00 + c01 + c10 + c11
+        cnt = ((children[0][0] + children[1][0]) + children[2][0]) + children[3][0]
+        zs = ((children[0][1] + children[1][1]) + children[2][1]) + children[3][1]
+        denom = jnp.maximum(cnt, 1.0)
+        wsum_x = ((children[0][0] * children[0][2] + children[1][0] * children[1][2])
+                  + children[2][0] * children[2][2]) + children[3][0] * children[3][2]
+        wsum_y = ((children[0][0] * children[0][3] + children[1][0] * children[1][3])
+                  + children[2][0] * children[2][3]) + children[3][0] * children[3][3]
+        gx_mid, gy_mid = _node_centres(grid, nx, ny, step, dtype)
+        ctx = jnp.where(cnt > 0, wsum_x / denom, gx_mid)
+        cty = jnp.where(cnt > 0, wsum_y / denom, gy_mid)
+        mx = sum(c[4] + c[1] * (c[2] - ctx) for c in children)
+        my = sum(c[5] + c[1] * (c[3] - cty) for c in children)
+        zbar = zs / denom
+        e_terms = []
+        zd_terms = []
+        for c in children:
+            dist = jnp.sqrt((c[2] - ctx) ** 2 + (c[3] - cty) ** 2)
+            e_terms.append(jnp.where(c[0] > 0, dist + c[6], 0.0))
+            czbar = c[1] / jnp.maximum(c[0], 1.0)
+            zd_terms.append(jnp.where(c[0] > 0, jnp.abs(czbar - zbar) + c[7], 0.0))
+        e = jnp.maximum(jnp.maximum(e_terms[0], e_terms[1]),
+                        jnp.maximum(e_terms[2], e_terms[3]))
+        zd = jnp.maximum(jnp.maximum(zd_terms[0], zd_terms[1]),
+                         jnp.maximum(zd_terms[2], zd_terms[3]))
+    return tuple(levels)
+
+
 def morton_ids(cx, cy):
     """Morton (Z-order) interleave of cell indices — sorting queries by this
     keeps consecutive queries in spatially adjacent cells, so per-block

@@ -12,7 +12,10 @@ seam-split block layout, per-query safe radii from the plan's
 static-capacity CSR candidate gather, the sparsity-skipping Phase 1 over
 candidate rows and the full-data Phase 2 — or, for
 ``build_plan(phase2="farfield")`` plans, the near/far split Phase 2 with a
-plan-proved error bound (DESIGN.md §7).  Exactness is unconditional and
+plan-proved error bound (DESIGN.md §7), or, for ``phase2="quadtree"``
+plans, the multi-level Barnes–Hut far field whose per-node opening
+criterion and dipole correction make the bound second-order (DESIGN.md
+§8).  Exactness is unconditional and
 now *per block*: the kernel result is kept wherever a block's candidates
 fit the plan's capacity, and queries in overflowing blocks (far out-of-bbox
 queries, query distributions unlike the data) get their alpha from the
@@ -46,6 +49,7 @@ from repro.kernels.aidw_grid import (
     gather_candidates_csr,
     phase1_alpha_from_candidates,
     phase2_far_aggregates,
+    phase2_far_nodes,
     phase2_near_weights,
     phase2_weights_full,
 )
@@ -137,6 +141,195 @@ def _phase2_farfield(plan: InterpolationPlan, qx_v, qy_v, alpha_v,
     return z, need, rect_cells
 
 
+def _quadtree_walk(plan: InterpolationPlan, hxlo, hxhi, hylo, hyhi):
+    """Barnes–Hut walk over the plan's quadtree, one table per level.
+
+    Per query block (home rectangle ``hxlo..hxhi x hylo..hyhi``, inclusive
+    cell coords) and per level, every node gets the OPENING criterion: a
+    node is CLOSED — emitted as one aggregate+dipole term — iff its
+    Chebyshev cell gap from the home rectangle clears ``radius + 1`` (its
+    cells are all outside the near rectangle, and the ring invariant gives
+    every point distance ``>= (gap-1) * cell_min``) and its stored
+    dispersion fits the plan's opening ratio, ``e <= tau * (gap-1) *
+    cell_min`` — so each term's own tau never exceeds ``plan.qt_tau`` and
+    the plan's dipole bound covers it.  A processed node failing the
+    criterion is OPENED: its four children are processed at the next finer
+    level.  Level-0 cells cannot be opened further and are force-closed on
+    the gap test alone (``tau_eff`` was chosen at plan time to cover them).
+    Empty nodes are neither opened nor emitted.  Induction over levels
+    gives the partition the error budget needs: every far cell is counted
+    by EXACTLY one closed node, every near cell by none.
+
+    The walk is plain masked arithmetic over all ``(block, node)`` pairs —
+    cheap bools, no weights — while the expensive weight evaluation runs
+    only over the ~O(log m) closed nodes each block compacts into its
+    static ``(nb, k_pad)`` id tables (pad slots point at the sentinel
+    node).  Returns per level ``(table, n_closed, n_opened, n_processed)``;
+    ``n_closed > k_pad`` means the table overflowed and the caller must
+    route the block to the exact sweep.
+    """
+    grid = plan.grid
+    dtype = grid.pt_x.dtype
+    radius = plan.farfield_radius
+    tau = plan.qt_tau
+    cell_min = jnp.minimum(grid.cell_size[0], grid.cell_size[1]).astype(dtype)
+    nb = hxlo.shape[0]
+    n_lv = len(plan.qt_levels)
+    out = [None] * n_lv
+    opened_up = None
+    parent_nx = 0
+    for lv in range(n_lv - 1, -1, -1):
+        nx, ny, step, k_pad, _tile = plan.qt_levels[lv]
+        n_nodes = nx * ny
+        jx = jnp.arange(nx, dtype=jnp.int32)
+        jy = jnp.arange(ny, dtype=jnp.int32)
+        nxlo = jx * step
+        nxhi = jnp.minimum((jx + 1) * step, grid.gx) - 1
+        nylo = jy * step
+        nyhi = jnp.minimum((jy + 1) * step, grid.gy) - 1
+        gapx = jnp.maximum(jnp.maximum(nxlo[None, :] - hxhi[:, None],
+                                       hxlo[:, None] - nxhi[None, :]), 0)
+        gapy = jnp.maximum(jnp.maximum(nylo[None, :] - hyhi[:, None],
+                                       hylo[:, None] - nyhi[None, :]), 0)
+        gap = jnp.maximum(gapy[:, :, None], gapx[:, None, :]).reshape(nb, n_nodes)
+        cnt = plan.far[lv][2][:n_nodes]
+        e = plan.far[lv][6][:n_nodes]
+        if lv == n_lv - 1:
+            proc = jnp.ones((nb, n_nodes), bool)
+        else:
+            pids = ((jy[:, None] // 2) * parent_nx + (jx[None, :] // 2)).reshape(-1)
+            proc = opened_up[:, pids]
+        parent_nx = nx
+        nonempty = (cnt > 0)[None, :]
+        far_enough = gap >= radius + 1
+        if lv == 0:
+            closed = proc & far_enough & nonempty
+            n_opened = jnp.zeros((nb,), jnp.int32)
+        else:
+            tight = e[None, :] <= tau * (gap - 1).astype(dtype) * cell_min
+            closed = proc & far_enough & tight & nonempty
+            opened = proc & nonempty & ~(far_enough & tight)
+            opened_up = opened
+            n_opened = jnp.sum(opened.astype(jnp.int32), axis=1)
+        n_proc = jnp.sum((proc & nonempty).astype(jnp.int32), axis=1)
+        n_closed = jnp.sum(closed.astype(jnp.int32), axis=1)
+        # compact the closed ids into the static-width table: cumsum
+        # positions, one dump slot past k_pad for everything else
+        pos = jnp.cumsum(closed.astype(jnp.int32), axis=1) - 1
+        col = jnp.where(closed, jnp.minimum(pos, k_pad), k_pad)
+        ids = jnp.broadcast_to(jnp.arange(n_nodes, dtype=jnp.int32)[None, :],
+                               (nb, n_nodes))
+        tbl = jnp.full((nb, k_pad + 1), n_nodes, jnp.int32)
+        tbl = tbl.at[jnp.arange(nb, dtype=jnp.int32)[:, None], col].set(
+            jnp.where(closed, ids, n_nodes), mode="drop"
+        )
+        out[lv] = (tbl[:, :k_pad], n_closed, n_opened, n_proc)
+    return out
+
+
+def _phase2_quadtree(plan: InterpolationPlan, qx_v, qy_v, alpha_v,
+                     cx_v=None, cy_v=None):
+    """Quadtree far-field Phase 2 over a blocked query view (DESIGN.md §8).
+
+    The near field is the single-level arm's, verbatim: exact per-point
+    weights over the home rectangle expanded by ``plan.farfield_radius``
+    (CSR gather at ``p2_capacity``, tile-table skip).  The far field runs
+    :func:`_quadtree_walk` and then one :func:`phase2_far_nodes` sweep per
+    level over the gathered node tables, accumulating into the same
+    ``(sum_w, sum_wz)`` the near sweep produced.  Returns ``(z, need,
+    overflow, rect_cells, closed_counts, opened_tot, proc_tot)`` —
+    ``overflow (nb,)`` flags blocks whose near gather OR any level table
+    was truncated (their queries must take the exact sweep; the bound
+    assumes completeness), ``closed_counts`` the per-level ``(nb,)`` closed
+    node counts for the stats dict.
+    """
+    grid = plan.grid
+    if cx_v is None or cy_v is None:
+        cx_v, cy_v = cell_of(grid, qx_v, qy_v)
+    r_zero = jnp.zeros(cx_v.shape, jnp.int32)
+    hxlo, hxhi, hylo, hyhi = block_rectangles(grid, cx_v, cy_v, r_zero,
+                                              plan.block_q)
+    r_near = jnp.full(cx_v.shape, plan.farfield_radius, jnp.int32)
+    xlo, xhi, ylo, yhi = block_rectangles(grid, cx_v, cy_v, r_near, plan.block_q)
+    cand_x, cand_y, cand_z, need = gather_candidates_csr(
+        grid, xlo, xhi, ylo, yhi, plan.p2_capacity, with_z=True
+    )
+    num_tiles = _tile_table(need, plan.p2_capacity, plan.p2_block_d,
+                            plan.pipeline)
+    ah = alpha_v * 0.5
+    sw, swz, md_n, hz_n = phase2_near_weights(
+        qx_v, qy_v, ah, cand_x, cand_y, cand_z, num_tiles,
+        block_q=plan.block_q, block_d=plan.p2_block_d, interpret=plan.interpret,
+    )
+    overflow = need > plan.p2_capacity
+    closed_counts = []
+    opened_tot = jnp.zeros(need.shape, jnp.int32)
+    proc_tot = jnp.zeros(need.shape, jnp.int32)
+    tables = _quadtree_walk(plan, hxlo, hxhi, hylo, hyhi)
+    for lv, (tbl, n_closed, n_opened, n_proc) in enumerate(tables):
+        _nx, _ny, _step, k_pad, tile = plan.qt_levels[lv]
+        fx, fy, fcnt, fzs, fmx, fmy, _fe = plan.far[lv]
+        covered = jnp.minimum(n_closed, k_pad)
+        nt = (covered + tile - 1) // tile
+        sw_f, swz_f = phase2_far_nodes(
+            qx_v, qy_v, ah, fx[tbl], fy[tbl], fcnt[tbl], fzs[tbl],
+            fmx[tbl], fmy[tbl], nt,
+            block_q=plan.block_q, block_d=tile, interpret=plan.interpret,
+        )
+        sw = sw + sw_f
+        swz = swz + swz_f
+        overflow = overflow | (n_closed > k_pad)
+        closed_counts.append(n_closed)
+        opened_tot = opened_tot + n_opened
+        proc_tot = proc_tot + n_proc
+    z = jnp.where(md_n <= plan.params.exact_hit_eps, hz_n, swz / sw)
+    rect_cells = (xhi - xlo + 1) * (yhi - ylo + 1)
+    return z, need, overflow, rect_cells, closed_counts, opened_tot, proc_tot
+
+
+def _phase2_exact_masked(plan: InterpolationPlan, qx_s, qy_s, alpha, over_q):
+    """Per-block masked exact Phase 2 — the overflow arm of the blend.
+
+    ``over_q (n_tot,)`` flags queries (sorted layout) whose approximated
+    Phase 2 is unusable (near gather or level table truncated).  Instead of
+    the old whole-batch ``lax.cond`` full sweep, each ``block_q`` run with
+    at least one flagged query gets its OWN full-data sweep — a
+    ``fori_loop`` whose per-block ``cond`` skips clean blocks, so one
+    overflowing block costs O(block_q * m), not O(n * m) (the ``grid_knn
+    (active=)`` discipline applied to Phase 2).  Per-block single calls of
+    :func:`phase2_weights_full` are bit-identical to the corresponding
+    blocks of a whole-batch call (the kernel is block-parallel), which the
+    overflow bitwise tests pin.  Unswept blocks return 0 — callers blend
+    through ``jnp.where(over_q, ...)``.
+    """
+    bq = plan.block_q
+    n_tot = qx_s.shape[0]
+    nb = n_tot // bq
+    dtype = qx_s.dtype
+    dxp, dyp, dzp = plan.data
+    over_blk = jnp.any(over_q.reshape(nb, bq), axis=1)
+    qx2 = qx_s.reshape(nb, bq)
+    qy2 = qy_s.reshape(nb, bq)
+    al2 = alpha.reshape(nb, bq)
+
+    def sweep(b):
+        qxb = jax.lax.dynamic_slice(qx2, (b, 0), (1, bq)).reshape(bq)
+        qyb = jax.lax.dynamic_slice(qy2, (b, 0), (1, bq)).reshape(bq)
+        alb = jax.lax.dynamic_slice(al2, (b, 0), (1, bq)).reshape(bq, 1)
+        return phase2_weights_full(
+            qxb, qyb, alb, dxp, dyp, dzp,
+            eps=plan.params.exact_hit_eps, block_q=bq,
+            block_d=plan.block_d, interpret=plan.interpret,
+        )
+
+    def body(b, z):
+        zb = jax.lax.cond(over_blk[b], lambda: sweep(b),
+                          lambda: jnp.zeros((bq, 1), dtype))
+        return jax.lax.dynamic_update_slice(z, zb, (b * bq, 0))
+
+    return jax.lax.fori_loop(0, nb, body, jnp.zeros((n_tot, 1), dtype))
+
+
 def _execute_grid(plan: InterpolationPlan, qx, qy):
     grid = plan.grid
     params = plan.params
@@ -197,32 +390,33 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
     alpha = jnp.where(over_q[:, None], alpha_exact, alpha_fast)
 
     dxp, dyp, dzp = plan.data
-    if plan.phase2 == "farfield":
-        # far-field Phase 2 runs in the seam-split view (its rectangles must
-        # not straddle Morton seams either); alpha maps in through src, the
-        # per-slot z maps back through dest.  Blocks whose near field
-        # overflows p2_capacity would violate the error bound (truncated
-        # near gather), so their queries take the exact full sweep instead —
-        # computed at most once per batch, skipped entirely when clean.
+    qt_diag = None
+    if plan.phase2 in ("farfield", "quadtree"):
+        # approximated Phase 2 runs in the seam-split view (its rectangles
+        # must not straddle Morton seams either); alpha maps in through src,
+        # the per-slot z maps back through dest.  Blocks whose near field
+        # overflows p2_capacity — or, for the quadtree, whose closed-node
+        # table overflows its level capacity — would violate the error
+        # bound (truncated sweep), so their queries take the per-block
+        # masked exact sweep instead: one overflowing block costs
+        # O(block_q * m), a clean batch costs nothing.
         alpha_v = alpha[src] if src is not None else alpha
-        z_v, need2, rect_cells = _phase2_farfield(plan, qx_v, qy_v, alpha_v,
-                                                  cx_v, cy_v)
-        over2_v = jnp.repeat(need2 > plan.p2_capacity, plan.block_q)
+        if plan.phase2 == "quadtree":
+            (z_v, need2, over2_b, rect_cells, closed_counts, opened_tot,
+             proc_tot) = _phase2_quadtree(plan, qx_v, qy_v, alpha_v, cx_v, cy_v)
+            qt_diag = (closed_counts, opened_tot, proc_tot)
+        else:
+            z_v, need2, rect_cells = _phase2_farfield(plan, qx_v, qy_v,
+                                                      alpha_v, cx_v, cy_v)
+            over2_b = need2 > plan.p2_capacity
+        over2_v = jnp.repeat(over2_b, plan.block_q)
         if dest is not None:
             z_near = z_v[dest]
             over2_s = over2_v[dest]
         else:
             z_near = z_v
             over2_s = over2_v
-        z_full = jax.lax.cond(
-            jnp.any(over2_s[:n]),
-            lambda: phase2_weights_full(
-                qx_s, qy_s, alpha, dxp, dyp, dzp,
-                eps=params.exact_hit_eps, block_q=plan.block_q,
-                block_d=plan.block_d, interpret=plan.interpret,
-            ),
-            lambda: jnp.zeros_like(z_near),
-        )
+        z_full = _phase2_exact_masked(plan, qx_s, qy_s, alpha, over2_s)
         zhat = jnp.where(over2_s[:, None], z_full, z_near)
     else:
         zhat = phase2_weights_full(
@@ -251,15 +445,35 @@ def _execute_grid(plan: InterpolationPlan, qx, qy):
         "skipped_tile_fraction": 1.0
         - jnp.sum(jnp.where(real_b, num_tiles, 0)).astype(jnp.float32) / n_real_tiles,
     }
-    if plan.phase2 == "farfield":
+    if plan.phase2 in ("farfield", "quadtree"):
         n_real_b = jnp.maximum(jnp.sum(real_b.astype(jnp.int32)), 1).astype(jnp.float32)
+        if plan.phase2 == "quadtree":
+            # far work per block is the number of CLOSED nodes summed over
+            # levels — the quantity the O(log m) sweep benchmark tracks
+            closed_counts, opened_tot, proc_tot = qt_diag
+            closed_stack = jnp.stack(closed_counts)           # (n_levels, nb)
+            far_terms = jnp.sum(closed_stack, axis=0)
+            far_mean = jnp.sum(
+                jnp.where(real_b, far_terms, 0)).astype(jnp.float32) / n_real_b
+            stats.update({
+                "cells_per_level": jnp.sum(
+                    jnp.where(real_b[None, :], closed_stack, 0), axis=1
+                ).astype(jnp.float32) / n_real_b,
+                "opened_fraction": jnp.sum(
+                    jnp.where(real_b, opened_tot, 0)).astype(jnp.float32)
+                / jnp.maximum(jnp.sum(jnp.where(real_b, proc_tot, 0)), 1
+                              ).astype(jnp.float32),
+                "quadtree_rtol_bound": plan.farfield_bound,
+            })
+        else:
+            far_mean = jnp.sum(
+                jnp.where(real_b, grid.n_cells - rect_cells, 0)
+            ).astype(jnp.float32) / n_real_b
+            stats["farfield_rtol_bound"] = plan.farfield_bound
         stats.update({
             "near_points_mean": jnp.sum(
                 jnp.where(real_b, need2, 0)).astype(jnp.float32) / n_real_b,
-            "far_cells_mean": jnp.sum(
-                jnp.where(real_b, grid.n_cells - rect_cells, 0)
-            ).astype(jnp.float32) / n_real_b,
-            "farfield_rtol_bound": plan.farfield_bound,
+            "far_cells_mean": far_mean,
             "p2_overflow_queries": jnp.sum(over2_s[:n].astype(jnp.int32)),
         })
     return zhat[:n, 0][inv], alpha[:n, 0][inv], stats
@@ -430,6 +644,13 @@ def execute_with_stats(plan: InterpolationPlan, qx, qy):
     ``far_cells_mean`` (per real query block), the plan's proved
     ``farfield_rtol_bound``, and ``p2_overflow_queries`` (queries routed to
     the exact Phase-2 sweep because their block's near gather overflowed).
+    ``grid`` with ``phase2="quadtree"`` reports the same near/overflow keys
+    plus ``far_cells_mean`` (mean CLOSED nodes per real block, summed over
+    levels — the ~O(log m) quantity), ``cells_per_level`` (its per-level
+    split, shape ``(n_levels,)``), ``opened_fraction`` (opened / processed
+    nonempty nodes — how much of the tree the walk descends) and the
+    plan's proved ``quadtree_rtol_bound``; the dict structure is static per
+    plan (the level count is a plan static).
     ``tiled_v2``: the measured ``merge_fraction``.
     The computation is jitted with a static dict structure per plan (no
     retrace across same-shape batches); only the streak bookkeeping runs on

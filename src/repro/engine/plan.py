@@ -37,6 +37,7 @@ from repro.core.grid import (
     UniformGrid,
     build_grid,
     cell_aggregates,
+    quadtree_aggregates,
     required_radius_table,
     static_cell_radius,
 )
@@ -106,16 +107,19 @@ class InterpolationPlan:
     pipeline: str             # grid Phase 1: "prefetch" (tile-skip) | "dense"
     phase2: str               # grid Phase 2: "exact" (full sweep) | "farfield"
     farfield_rtol: float      # farfield: user-requested relative error target
-    farfield_radius: int      # farfield: near-field Chebyshev radius (cells)
-    farfield_bound: float     # farfield: proved worst-case relative error
+    farfield_radius: int      # far field/quadtree: near-field radius (cells)
+    farfield_bound: float     # far field/quadtree: proved worst-case rel error
     p2_capacity: int          # farfield: static near-field candidate width
     p2_block_d: int           # farfield: near-field sweep tile
     p2_far_block_d: int       # farfield: far cell-aggregate sweep tile
+    qt_tau: float             # quadtree: effective opening ratio tau_eff
+    qt_levels: tuple          # quadtree: per-level (nx, ny, step, k_pad, tile)
     # --- children ---
     data: tuple               # impl-specific padded arrays
     grid: UniformGrid | None
     r_need: jnp.ndarray | None  # (gy, gx) int32 per-cell required_radius
     far: tuple                # farfield: padded (1, ncp) cell-aggregate arrays
+                              # quadtree: per-level node-aggregate tuples
 
     def tree_flatten(self):
         aux = (self.impl, self.layout, self.params, self.area, self.m,
@@ -124,7 +128,8 @@ class InterpolationPlan:
                self.cand_capacity, self.cand_block_d, self.grid_rebuilds,
                self.seam_level, self.pipeline, self.phase2,
                self.farfield_rtol, self.farfield_radius, self.farfield_bound,
-               self.p2_capacity, self.p2_block_d, self.p2_far_block_d)
+               self.p2_capacity, self.p2_block_d, self.p2_far_block_d,
+               self.qt_tau, self.qt_levels)
         return (self.data, self.grid, self.r_need, self.far), aux
 
     @classmethod
@@ -221,6 +226,31 @@ def _farfield_bound_model(radius: int, cell_min: float, a_max: float,
     if radius <= 0:
         return math.inf
     tau = e_max / (radius * cell_min) if cell_min > 0 else math.inf
+    g = z_dev_max / z_abs_max if z_abs_max > 0 else 0.0
+    return _bound_from_tau(tau, a_max, g)
+
+
+def _bound_from_tau(tau: float, a_max: float, g: float = 0.0,
+                    dipole: bool = False):
+    """The (tau, alpha) -> worst-case-relative-error core of the far-field
+    models, shared by the single-level model above and the quadtree model
+    (DESIGN.md §7-8).
+
+    ``dipole=False`` is the PR-5 single-level budget: second-order count term
+    plus the FIRST-order ``eta * g`` z-spread term (``g = z_dev_max /
+    z_abs_max``).  ``dipole=True`` is the quadtree budget: the kernel adds
+    the stored first z-moment term ``grad w(cent) . M``, which cancels the
+    z budget's first-order piece exactly (the count term's first order
+    already cancels because the centroid zeroes the first position moment),
+    so BOTH terms are second-order in tau:
+
+        |N_hat - N| <= eps2 * n * w(d) * z_abs_max,
+        |D_hat - D| <= eps2 * n * w(d),
+        bound = 2 * eps2 * (1+tau)^A / (1 - eps2 * (1+tau)^A).
+
+    Monotone non-increasing as tau shrinks (the property the hypothesis
+    test pins); ``inf`` when no guarantee exists at this tau.
+    """
     if tau >= 1.0:
         return math.inf
     grow = (1.0 + tau) ** a_max
@@ -228,8 +258,9 @@ def _farfield_bound_model(radius: int, cell_min: float, a_max: float,
     eps2h = eps2 * grow
     if eps2h >= 1.0:
         return math.inf
+    if dipole:
+        return 2.0 * eps2 * grow / (1.0 - eps2h)
     eta = (1.0 - tau) ** (-a_max) - 1.0
-    g = z_dev_max / z_abs_max if z_abs_max > 0 else 0.0
     return (2.0 * eps2 + eta * g) * grow / (1.0 - eps2h)
 
 
@@ -302,6 +333,125 @@ def _choose_farfield_radius(grid: UniformGrid, params: AIDWParams,
         stacklevel=4,
     )
     return radius, bound
+
+
+def _quadtree_tau_required(a_max: float, rtol: float) -> float:
+    """Largest opening ratio tau whose dipole bound still proves ``rtol`` —
+    bisection on the monotone :func:`_bound_from_tau` (60 steps ~ 1 ulp).
+    To leading order ``tau_req ~ sqrt(rtol / (2 * a * (a+1)))``; at a = 4,
+    rtol = 1e-3 that is ~7e-3 — an opening angle coarse data can actually
+    meet, unlike the first-order single-level budget."""
+    hi = 0.5
+    if _bound_from_tau(hi, a_max, dipole=True) <= rtol:
+        return hi
+    lo = 0.0
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if _bound_from_tau(mid, a_max, dipole=True) <= rtol:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def _choose_quadtree_radius(grid: UniformGrid, params: AIDWParams,
+                            farfield_rtol: float, e0_max: float, *,
+                            side: int, m: int):
+    """Near-field radius + effective opening ratio for the quadtree arm.
+
+    Returns ``(radius, tau_eff, bound)``.  The walk closes a node only when
+    its own dispersion ``e`` fits ``tau_eff * (gap-1) * cell_min`` — EXCEPT
+    level-0 cells, which cannot be opened further and are force-closed
+    whenever their gap clears ``radius + 1``.  ``tau_eff`` therefore must
+    also cover the worst level-0 cell at the near boundary:
+
+        tau_eff = max(tau_req, e0_max / (radius * cell_min)).
+
+    The smallest radius under the Phase-2 profitability cap whose
+    ``_bound_from_tau(tau_eff, dipole=True)`` meets ``farfield_rtol`` wins;
+    when even the cap radius cannot prove the target (cell dispersion too
+    coarse — e.g. uniform data, where e0 ~ 0.7 * cell) the fallback mirrors
+    :func:`_choose_farfield_radius`: cheapest non-vacuous radius + a warning
+    with the honest bound.
+    """
+    a_max = float(max(params.alpha_levels))
+    cell_min = float(jnp.minimum(grid.cell_size[0], grid.cell_size[1]))
+    cover = max(grid.gx, grid.gy)
+    occ_mean = max(m / max(grid.n_cells, 1), 1.0)
+    tau_req = _quadtree_tau_required(a_max, farfield_rtol)
+
+    def at_radius(radius):
+        if radius >= cover:
+            return tau_req, 0.0
+        if cell_min <= 0:
+            return math.inf, math.inf
+        tau_eff = max(tau_req, e0_max / (radius * cell_min))
+        return tau_eff, _bound_from_tau(tau_eff, a_max, dipole=True)
+
+    def modeled_cost(radius):
+        window = min(side + 2 * radius + 1, cover)
+        return window * window * occ_mean
+
+    r_cap = 1
+    while r_cap + 1 < cover and modeled_cost(r_cap + 1) <= m / 4:
+        r_cap += 1
+    for radius in range(1, r_cap + 1):
+        tau_eff, bound = at_radius(radius)
+        if bound <= farfield_rtol:
+            return radius, tau_eff, bound
+    radius = r_cap
+    for r in range(1, r_cap + 1):
+        if at_radius(r)[1] <= _FALLBACK_BOUND_CEIL:
+            radius = r
+            break
+    tau_eff, bound = at_radius(radius)
+    warnings.warn(
+        f"farfield_rtol={farfield_rtol:g} is not provable by the quadtree "
+        f"model within the profitable near-field budget (radius <= {r_cap} "
+        f"of a {grid.gx}x{grid.gy} grid): the worst cell's dispersion gives "
+        f"opening ratio {tau_eff:.3g} > required {tau_req:.3g}. Using radius "
+        f"{radius} with worst-case bound {bound:.3g}; measured error is "
+        "typically far below it — check farfield_error_report, or use a "
+        "coarser grid / sub-cell-clustered data for a provable target.",
+        stacklevel=4,
+    )
+    return radius, tau_eff, bound
+
+
+def _quadtree_level_statics(qt, radius: int, tau_eff: float, cell_min: float,
+                            side: int, tile_cap: int):
+    """Static per-level ``(nx, ny, step, k_pad, tile)`` table.
+
+    ``k_pad`` bounds how many CLOSED nodes one query block may emit at the
+    level; the heuristic inverts the opening criterion with the level
+    maxima: a level-``l`` node is closed only where its PARENT opened, and
+    a parent at cell gap ``>= Gcap = max(radius+1, e_parent_max /
+    (tau_eff*cell_min) + 1)`` never opens — so closed nodes live inside a
+    bounded annulus of the block.  The top level has no parent (every node
+    is a candidate).  Undersizing is safe: the engine detects per-block
+    table overflow at execute time and routes those queries to the exact
+    sweep, exactly like the near-capacity overflow blend.
+    """
+    n_lv = len(qt)
+    out = []
+    for lv, level in enumerate(qt):
+        n_nodes = level.nx * level.ny
+        if lv == n_lv - 1:
+            k_est = n_nodes
+        else:
+            parent = qt[lv + 1]
+            if tau_eff > 0 and cell_min > 0 and math.isfinite(tau_eff):
+                gcap = max(radius + 1,
+                           int(math.ceil(parent.e_max / (tau_eff * cell_min))) + 1)
+            else:
+                gcap = radius + 1
+            span = (side + 2 * gcap) // parent.step + 2
+            k_est = min(4 * span * span, n_nodes)
+        k_est = max(k_est, 8)
+        tile = min(tile_cap, max(128, _round_up(k_est, 128)))
+        k_pad = _round_up(k_est, tile)
+        out.append((level.nx, level.ny, level.step, k_pad, tile))
+    return tuple(out)
 
 
 def _choose_seam_level(grid: UniformGrid, window: int) -> int:
@@ -381,7 +531,57 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
     )
 
     ff = dict(farfield_radius=0, farfield_bound=0.0, p2_capacity=0,
-              p2_block_d=0, p2_far_block_d=0, far=())
+              p2_block_d=0, p2_far_block_d=0, qt_tau=0.0, qt_levels=(),
+              far=())
+    if phase2 == "quadtree":
+        qt = quadtree_aggregates(grid)
+        cell_min = float(jnp.minimum(grid.cell_size[0], grid.cell_size[1]))
+        a_max = float(max(params.alpha_levels))
+        if farfield_radius is not None:  # user override: radius as given
+            radius = max(1, min(int(farfield_radius), max(grid.gx, grid.gy)))
+            tau_req = _quadtree_tau_required(a_max, farfield_rtol)
+            if radius >= max(grid.gx, grid.gy):
+                tau_eff, bound = tau_req, 0.0
+            elif cell_min > 0:
+                tau_eff = max(tau_req, qt[0].e_max / (radius * cell_min))
+                bound = _bound_from_tau(tau_eff, a_max, dipole=True)
+            else:
+                tau_eff, bound = math.inf, math.inf
+        else:
+            radius, tau_eff, bound = _choose_quadtree_radius(
+                grid, params, farfield_rtol, qt[0].e_max, side=side, m=m
+            )
+        # near-field machinery is shared with the single-level arm: same
+        # densest-window capacity model, same tile autotune
+        window2 = min(side + 2 * radius + 1, max(grid.gx, grid.gy))
+        cap2 = min(_densest_window_count(grid, window2), m)
+        tile_cap = max(512, _round_up(_P2_TILE_ELEMS // block_q, 128))
+        p2_block_d = min(tile_cap, max(128, _round_up(cap2, 128)))
+        p2_capacity = _round_up(cap2, p2_block_d)
+        qt_levels = _quadtree_level_statics(qt, radius, tau_eff, cell_min,
+                                            side, tile_cap)
+        # per level: node aggregates + ONE appended sentinel node (index
+        # nx*ny) that pad slots of the gathered per-block tables point to —
+        # sentinel centroid (d2 -> inf, w -> 0) and zero count/z-sum/moment,
+        # so pad slots contribute exactly 0 to both accumulators
+        zero1 = jnp.zeros((1,), dtype)
+        big1 = jnp.full((1,), big, dtype)
+        far = tuple(
+            (
+                jnp.concatenate([level.cent_x.astype(dtype), big1]),
+                jnp.concatenate([level.cent_y.astype(dtype), big1]),
+                jnp.concatenate([level.count.astype(dtype), zero1]),
+                jnp.concatenate([level.z_sum.astype(dtype), zero1]),
+                jnp.concatenate([level.mx.astype(dtype), zero1]),
+                jnp.concatenate([level.my.astype(dtype), zero1]),
+                jnp.concatenate([level.e.astype(dtype), zero1]),
+            )
+            for level in qt
+        )
+        ff = dict(farfield_radius=radius, farfield_bound=float(bound),
+                  p2_capacity=p2_capacity, p2_block_d=p2_block_d,
+                  p2_far_block_d=0, qt_tau=float(tau_eff),
+                  qt_levels=qt_levels, far=far)
     if phase2 == "farfield":
         agg = cell_aggregates(grid)
         if farfield_radius is not None:  # user override: radius as given
@@ -469,7 +669,7 @@ def build_plan(
     all-sentinel candidate tiles) or "dense" (every block walks the full
     static capacity; the conservative fallback, bit-identical results).
     ``phase2`` (grid impl) selects the Phase-2 sweep: "exact" (default; the
-    full m-point weighted sweep, bit-identical to every prior release) or
+    full m-point weighted sweep, bit-identical to every prior release),
     "farfield" (exact per-point weights only inside a plan-chosen near-field
     radius, one aggregate term per far cell beyond it — the first
     *approximating* path; its worst-case relative error, proved by the
@@ -478,7 +678,14 @@ def build_plan(
     ``plan.farfield_bound``.  The bound meets ``farfield_rtol`` when that
     is provable at a profitable radius; otherwise the plan WARNS and
     ``farfield_bound`` is the honest, larger worst case — always check it
-    rather than assuming the request was met).
+    rather than assuming the request was met), or "quadtree" (DESIGN.md §8:
+    the far field is walked as a Barnes–Hut quadtree of cell aggregates,
+    coarse levels closed wherever the per-node opening criterion holds and
+    a dipole z-moment term added per closed node, making BOTH error terms
+    second-order in the opening ratio — per-query far work drops to
+    ~O(log m) and rtol=1e-3 becomes provable wherever data clusters below
+    the cell scale; same near-field machinery, same ``farfield_bound``
+    reporting contract as "farfield").
     ``farfield_rtol`` is the requested relative-error ceiling, measured
     against ``max|z_data|`` (see ``core.accuracy.farfield_error_report``);
     when it is not provable at a profitable radius the plan warns and
@@ -503,10 +710,11 @@ def build_plan(
         raise ValueError(f"pipeline must be 'prefetch' or 'dense', got {pipeline!r}")
     if seam_level is not None and not (0 <= int(seam_level) <= 8):
         raise ValueError(f"seam_level must be in [0, 8], got {seam_level!r}")
-    if phase2 not in ("exact", "farfield"):
-        raise ValueError(f"phase2 must be 'exact' or 'farfield', got {phase2!r}")
-    if phase2 == "farfield" and impl != "grid":
-        raise ValueError("phase2='farfield' requires impl='grid' (the cell "
+    if phase2 not in ("exact", "farfield", "quadtree"):
+        raise ValueError(f"phase2 must be 'exact', 'farfield' or 'quadtree', "
+                         f"got {phase2!r}")
+    if phase2 in ("farfield", "quadtree") and impl != "grid":
+        raise ValueError(f"phase2={phase2!r} requires impl='grid' (the cell "
                          "aggregates live on the grid snapshot)")
     if not float(farfield_rtol) > 0.0:
         raise ValueError(f"farfield_rtol must be > 0, got {farfield_rtol!r}")
@@ -536,6 +744,7 @@ def build_plan(
         phase2=phase2, farfield_rtol=float(farfield_rtol),
         farfield_radius=0, farfield_bound=0.0,
         p2_capacity=0, p2_block_d=0, p2_far_block_d=0,
+        qt_tau=0.0, qt_levels=(),
         data=(), grid=None, r_need=None, far=(),
     )
 

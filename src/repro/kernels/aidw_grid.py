@@ -44,10 +44,17 @@ of ``(snapshot arrays, queries, static capacity)`` and runs under ``jax.jit``:
   ``z_sum*w(centroid)`` into ``(sum_w, sum_wz)``.  The engine combines the
   two and applies the exact-hit guard; the worst-case relative error is
   bounded at plan time (``engine.plan._choose_farfield_radius``).
+* :func:`phase2_far_nodes` — the multi-level quadtree far field
+  (``build_plan(phase2="quadtree")``, DESIGN.md §8): the same near kernel,
+  but the far sweep runs once per quadtree LEVEL over per-block tables of
+  closed nodes (gathered by the engine's Barnes–Hut walk), each node
+  contributing its aggregate term plus a dipole z-moment correction — the
+  piece that cancels the z budget's first-order error and makes the plan's
+  bound second-order in the opening ratio.
 
-Morton sorting, seam splitting, padding, the per-block overflow blend and
-the unsort live in ``repro.engine.execute``; this module is only the kernel
-plumbing.
+Morton sorting, seam splitting, padding, the per-block overflow blend, the
+quadtree level walk and the unsort live in ``repro.engine.execute``; this
+module is only the kernel plumbing.
 """
 
 from __future__ import annotations
@@ -384,6 +391,89 @@ def phase2_far_aggregates(
         compiler_params=_SEMANTICS,
         interpret=interpret,
     )(rects.astype(jnp.int32), qx2, qy2, alpha_half, fx, fy, fix, fiy, fcnt, fzs)
+
+
+def _far_node_kernel(nt_ref, qx_ref, qy_ref, ah_ref, fx_ref, fy_ref,
+                     fcnt_ref, fzs_ref, fmx_ref, fmy_ref,
+                     sw_ref, swz_ref, acc_w, acc_wz):
+    """Quadtree far-field level sweep: one aggregate + DIPOLE term per
+    closed node of the block's gathered level table (DESIGN.md §8).
+
+    The monopole terms are the far-cell kernel's (``count * w`` / ``z_sum *
+    w`` at the centroid distance); the dipole adds ``grad w(cent) . M`` with
+    ``M = (mx, my)`` the node's stored first z-moment about its centroid:
+    for ``w(p) = |q - p|^-a``, ``grad_p w = a |q - p|^(-a-2) (q - p)``, so
+    the term is ``a * w / d2 * ((qx-cx) mx + (qy-cy) my)`` — it cancels the
+    z budget's first-order error, which is what makes the plan's quadtree
+    bound second-order.  Pad slots of the table point at the plan's
+    sentinel node: centroid at the coordinate sentinel (``d2`` overflows to
+    +inf, ``w = 0``, ``w / d2 = 0``) and zero count/z-sum/moment, so they
+    add exactly 0 to both accumulators.  Steps past ``nt_ref[i]`` are
+    clamped revisits with the accumulation predicated off, same tile-table
+    discipline as the near kernel.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_w[...] = jnp.zeros(acc_w.shape, acc_w.dtype)
+        acc_wz[...] = jnp.zeros(acc_wz.shape, acc_wz.dtype)
+
+    @pl.when(j < nt_ref[i])
+    def _accumulate():
+        dqx = qx_ref[...] - fx_ref[...]
+        dqy = qy_ref[...] - fy_ref[...]
+        d2 = dqx * dqx + dqy * dqy
+        ah = ah_ref[...]
+        w = pow_weight(d2, ah)
+        tiny = jnp.asarray(1e-30 if d2.dtype == jnp.float32 else 1e-290, d2.dtype)
+        grad = (2.0 * ah) * w / jnp.maximum(d2, tiny)
+        dip = grad * (dqx * fmx_ref[...] + dqy * fmy_ref[...])
+        acc_w[...] += jnp.sum(w * fcnt_ref[...], axis=1, keepdims=True)
+        acc_wz[...] += jnp.sum(w * fzs_ref[...] + dip, axis=1, keepdims=True)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        sw_ref[...] = acc_w[...]
+        swz_ref[...] = acc_wz[...]
+
+
+def phase2_far_nodes(
+    qx_s, qy_s, alpha_half, node_x, node_y, node_cnt, node_zs, node_mx,
+    node_my, num_tiles, *, block_q: int, block_d: int, interpret: bool,
+):
+    """One quadtree level's far sweep over per-block gathered node tables.
+
+    qx_s/qy_s/alpha_half: (n_tot,) / (n_tot, 1), ``n_tot % block_q == 0``;
+    node_*: (nb, k_pad) closed-node aggregates gathered by the engine's
+    level walk (pad slots = the sentinel node), ``k_pad % block_d == 0``;
+    num_tiles: (nb,) int32 ``ceil(closed_count / block_d)`` — a block with
+    few closed nodes at this level walks only its real tiles.
+
+    Returns ``(sum_w_far, sum_wz_far)``, each ``(n_tot, 1)`` — the engine
+    accumulates them across levels before the near/far combine.
+    """
+    n_tot = qx_s.shape[0]
+    nb, k_pad = node_x.shape
+    dtype = qx_s.dtype
+    qx2, qy2 = qx_s[:, None], qy_s[:, None]
+    q_spec = pl.BlockSpec((block_q, 1), _pf_query_map)
+    c_spec = pl.BlockSpec((1, block_d), _pf_clamped_tile_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, k_pad // block_d),
+        in_specs=[q_spec, q_spec, q_spec] + [c_spec] * 6,
+        out_specs=[q_spec] * 2,
+        scratch_shapes=[pltpu.VMEM((block_q, 1), dtype) for _ in range(2)],
+    )
+    return pl.pallas_call(
+        _far_node_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_tot, 1), dtype)] * 2,
+        compiler_params=_SEMANTICS,
+        interpret=interpret,
+    )(num_tiles.astype(jnp.int32), qx2, qy2, alpha_half,
+      node_x, node_y, node_cnt, node_zs, node_mx, node_my)
 
 
 def phase2_weights_full(

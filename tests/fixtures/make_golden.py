@@ -8,6 +8,17 @@ these values within dtype-appropriate tolerance, pinning the whole impl
 family to one absolute reference across PRs (pairwise parity tests cannot
 see a drift that moves two impls together).
 
+Beyond the exact-impl batches, the fixture pins the two approximating
+Phase-2 arms:
+
+* ``ffpin_*`` — the ``phase2="farfield"`` plan's committed OUTPUT on the
+  uniform batch (gx=12, radius=2): a semantic-regression gate that the
+  single-level arm is unchanged across PRs;
+* ``qtree_*`` — a tight-cluster batch where the quadtree dipole bound
+  PROVES rtol=1e-3, with its Kahan reference and the proved bound recorded
+  at generation time; ``test_golden.py`` asserts the live plan reproduces
+  the bound and stays within it against the committed reference.
+
 Run from the repo root (only when the reference semantics intentionally
 change — note it in the PR):
 
@@ -16,17 +27,39 @@ change — note it in the PR):
 
 import os
 import sys
+import warnings
 
 import numpy as np
+import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # conftest
 from conftest import make_points  # noqa: E402
 
 from repro.core.accuracy import aidw_interpolate_kahan  # noqa: E402
 from repro.core.aidw import AIDWParams  # noqa: E402
+from repro.core.grid import build_grid  # noqa: E402
+from repro.engine import build_plan, execute  # noqa: E402
 
 M, N, K = 900, 320, 10
+QT_GX, QT_M = 12, 4000
 OUT = os.path.join(os.path.dirname(__file__), "aidw_golden.npz")
+
+
+def _quadtree_batch(seed=303):
+    """Per-cell clusters far below the cell scale (sub-cell dispersion) with
+    z noise INSIDE each cluster — the configuration where the quadtree
+    dipole bound proves rtol=1e-3 and the single-level model cannot."""
+    rng = np.random.default_rng(seed)
+    centers = (np.stack(np.meshgrid(np.arange(QT_GX), np.arange(QT_GX)), -1)
+               .reshape(-1, 2) + 0.5) / QT_GX
+    pts = (centers[rng.integers(0, QT_GX * QT_GX, QT_M)]
+           + rng.normal(0, 1e-4, (QT_M, 2)))
+    pts = np.clip(pts, 0.0, 1.0).astype(np.float32)
+    dx, dy = pts[:, 0], pts[:, 1]
+    dz = (np.sin(6 * dx) * np.cos(6 * dy) + 2.0
+          + 0.3 * rng.standard_normal(QT_M)).astype(np.float32)
+    q = rng.random((N, 2)).astype(np.float32)
+    return dx, dy, dz, q[:, 0], q[:, 1]
 
 
 def main():
@@ -42,6 +75,39 @@ def main():
             f"{name}_qx": qx, f"{name}_qy": qy,
             f"{name}_z": np.asarray(z_ref), f"{name}_alpha": np.asarray(a_ref),
         })
+
+    # farfield pin: committed output of the single-level arm on the uniform
+    # batch — any semantic drift across PRs trips the golden gate.
+    dx, dy, dz, qx, qy = (blobs[f"uniform_{n}"]
+                          for n in ("dx", "dy", "dz", "qx", "qy"))
+    g = build_grid(jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
+                   gx=12, gy=12)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # honest-bound warning at this radius
+        plan = build_plan(dx, dy, dz, params=params, area=1.0, impl="grid",
+                          grid=g, phase2="farfield", farfield_radius=2,
+                          block_q=64)
+    z, a = execute(plan, jnp.asarray(qx), jnp.asarray(qy))
+    blobs.update({"ffpin_z": np.asarray(z), "ffpin_alpha": np.asarray(a),
+                  "ffpin_radius": np.int32(2), "ffpin_gx": np.int32(12)})
+
+    # quadtree pin: Kahan reference + the proved dipole bound on the
+    # provable batch.
+    dx, dy, dz, qx, qy = _quadtree_batch()
+    z_ref, a_ref = aidw_interpolate_kahan(dx, dy, dz, qx, qy, params,
+                                          area=1.0, q_chunk=64, d_chunk=128)
+    g = build_grid(jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
+                   gx=QT_GX, gy=QT_GX)
+    plan = build_plan(dx, dy, dz, params=params, area=1.0, impl="grid",
+                      grid=g, phase2="quadtree", block_q=64)
+    assert plan.farfield_bound <= 1e-3, "qtree batch must be provable"
+    blobs.update({
+        "qtree_dx": dx, "qtree_dy": dy, "qtree_dz": dz,
+        "qtree_qx": qx, "qtree_qy": qy,
+        "qtree_z": np.asarray(z_ref), "qtree_alpha": np.asarray(a_ref),
+        "qtree_bound": np.float64(plan.farfield_bound),
+        "qtree_gx": np.int32(QT_GX),
+    })
     np.savez_compressed(OUT, **blobs)
     print(f"wrote {OUT} ({os.path.getsize(OUT)} bytes)")
 

@@ -5,9 +5,14 @@ fixture (``tests/fixtures/aidw_golden.npz``, seeded uniform + clustered
 batches) within dtype-appropriate tolerance.  Pairwise parity tests compare
 impls to a freshly-computed oracle, so a change that shifts the oracle and
 an impl together passes them silently; this gate pins everyone to one
-absolute committed reference.  The approximating ``binned`` prefilter and
-``phase2="farfield"`` are deliberately excluded — their contracts are
-error-bounded, not golden-equal (see tests/engine/test_farfield.py).
+absolute committed reference.  The approximating ``binned`` prefilter is
+deliberately excluded — its contract is error-bounded, not golden-equal.
+The two approximating Phase-2 arms get their own pins: ``ffpin_*`` commits
+the farfield plan's OUTPUT (semantic-drift gate, near-bitwise tolerance)
+and ``qtree_*`` commits a Kahan reference plus the proved dipole bound the
+quadtree arm must reproduce and stay within (see tests/engine/
+test_farfield.py and tests/engine/test_quadtree.py for the live-oracle
+versions of these contracts).
 
 Regenerate (only for an intentional semantic change, noted in the PR):
 ``PYTHONPATH=src python tests/fixtures/make_golden.py``.
@@ -54,10 +59,70 @@ def test_exact_impl_reproduces_golden(golden, impl, batch):
                                rtol=RTOL, atol=ATOL, err_msg=f"{impl} z drift")
 
 
+def test_farfield_output_pinned(golden):
+    """``phase2="farfield"`` output is pinned to the committed fixture: this
+    PR family's contract is that the single-level arm is UNCHANGED while the
+    quadtree arm evolves.  Tolerance covers cross-backend codegen jitter
+    only — a semantic change moves values far beyond it and must come with
+    a deliberate regeneration noted in the PR."""
+    import warnings
+
+    from repro.core.grid import build_grid
+
+    p = AIDWParams(k=int(golden["k"]), area=float(golden["area"]))
+    dx, dy, dz, qx, qy = (golden[f"uniform_{n}"]
+                          for n in ("dx", "dy", "dz", "qx", "qy"))
+    gx = int(golden["ffpin_gx"])
+    g = build_grid(jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
+                   gx=gx, gy=gx)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        plan = build_plan(dx, dy, dz, params=p, area=float(golden["area"]),
+                          impl="grid", grid=g, phase2="farfield",
+                          farfield_radius=int(golden["ffpin_radius"]),
+                          block_q=64)
+    z, a = execute(plan, jnp.asarray(qx), jnp.asarray(qy))
+    np.testing.assert_allclose(np.asarray(a), golden["ffpin_alpha"],
+                               rtol=0, atol=1e-6, err_msg="farfield alpha drift")
+    np.testing.assert_allclose(np.asarray(z), golden["ffpin_z"],
+                               rtol=2e-6, atol=2e-6, err_msg="farfield z drift")
+
+
+def test_quadtree_pinned_within_proved_bound(golden):
+    """``phase2="quadtree"`` against the committed Kahan reference on the
+    provable tight-cluster batch: the live plan must reproduce the committed
+    proved bound (<= 1e-3) and its output must stay within that bound of
+    the committed reference."""
+    from repro.core.accuracy import FP_SLACK_ULPS
+    from repro.core.grid import build_grid
+
+    p = AIDWParams(k=int(golden["k"]), area=float(golden["area"]))
+    dx, dy, dz, qx, qy = (golden[f"qtree_{n}"]
+                          for n in ("dx", "dy", "dz", "qx", "qy"))
+    gx = int(golden["qtree_gx"])
+    g = build_grid(jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
+                   gx=gx, gy=gx)
+    plan = build_plan(dx, dy, dz, params=p, area=float(golden["area"]),
+                      impl="grid", grid=g, phase2="quadtree", block_q=64)
+    bound = float(golden["qtree_bound"])
+    assert bound <= 1e-3
+    np.testing.assert_allclose(plan.farfield_bound, bound, rtol=1e-9,
+                               err_msg="dipole bound model drift")
+    z, a = execute(plan, jnp.asarray(qx), jnp.asarray(qy))
+    scale = float(np.max(np.abs(golden["qtree_dz"])))
+    fp_slack = (FP_SLACK_ULPS * float(np.finfo(np.float32).eps)
+                * float(np.sqrt(dx.shape[0])))
+    rel = float(np.max(np.abs(np.asarray(z, np.float64)
+                              - golden["qtree_z"].astype(np.float64))) / scale)
+    assert rel <= bound + fp_slack, (rel, bound, fp_slack)
+    np.testing.assert_allclose(np.asarray(a), golden["qtree_alpha"],
+                               rtol=RTOL, atol=ATOL, err_msg="quadtree alpha drift")
+
+
 def test_fixture_is_self_consistent(golden):
     """The committed fixture itself: sane shapes and finite values (guards
     against a truncated or mis-regenerated npz slipping into the repo)."""
-    for batch in ("uniform", "clustered"):
+    for batch in ("uniform", "clustered", "qtree"):
         for name in ("dx", "dy", "dz", "qx", "qy", "z", "alpha"):
             arr = golden[f"{batch}_{name}"]
             assert arr.dtype == np.float32
