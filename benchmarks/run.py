@@ -856,6 +856,135 @@ def quadtree_phase2(quick=False, smoke=False, json_path=None):
         _row("quadtree", "json", json_path)
 
 
+def reestimator_heal(quick=False, smoke=False, json_path=None):
+    """Self-healing serving loop (--only reestimator): a persistent-overflow
+    storm drives the capacity re-estimator's background re-plan + atomic
+    hot-swap (DESIGN.md §9).  The serving config is the known-overflow shape
+    of tests/serving: a dense assumed query_occupancy undersizes the static
+    candidate capacity, so every out-of-bbox batch overflows and the streak
+    trigger fires after PERSISTENT_OVERFLOW_BATCHES batches.
+
+    Measured per warmup variant (the registry can execute a warmup batch on
+    the new plan BEFORE publishing it, keeping the jit compile off the
+    serving thread): batches-to-recovery after the trigger,
+    ``overflow_queries`` before/after the swap, and the p99 serving-batch
+    latency during the re-plan window vs the steady post-swap latency —
+    the swap stall.  Correctness is not re-proved here (the bitwise
+    recovery proof lives in tests/serving/test_reestimator.py); the bench
+    asserts only that recovery happens and overflow drops to zero.
+
+    CPU-interpret caveat (as grid_blend): absolute latencies are emulated
+    kernels; the warmup-on/off CONTRAST is the portable result.
+    """
+    import time as _time
+    import warnings as _warnings
+
+    from repro.engine import build_plan
+    from repro.engine.execute import PERSISTENT_OVERFLOW_BATCHES
+    from repro.serving import CapacityReestimator, PlanRegistry
+
+    p = AIDWParams(k=10, area=1.0, r_max=64.0)
+    m, nq = 4 * K, 64
+    write_json = json_path and not (smoke or quick)
+    # generous: recovery-in-batches here is wall-clock (the background build
+    # competes for the GIL under CPU interpret), not the bounded-batch proof
+    # — that one is join()-synchronised in tests/serving/test_reestimator.py
+    max_batches = 40 * PERSISTENT_OVERFLOW_BATCHES
+    rng = np.random.default_rng(13)
+    dxn, dyn, dzn = uniform_points(m, seed=0)
+    storm = (jnp.asarray((rng.random(nq) * 6 - 3).astype(np.float32)),
+             jnp.asarray((rng.random(nq) * 6 - 3).astype(np.float32)))
+    clean = (jnp.asarray((0.4 + 0.05 * rng.random(nq)).astype(np.float32)),
+             jnp.asarray((0.4 + 0.05 * rng.random(nq)).astype(np.float32)))
+
+    def heal_run(warmup):
+        plan = build_plan(dxn, dyn, dzn, params=p, area=1.0, impl="grid",
+                          query_occupancy=64.0)
+        reg = PlanRegistry()
+        re_ = CapacityReestimator(reg, "bench", plan, backoff=0.01,
+                                  warmup=warmup)
+        cap_before = plan.cand_capacity
+        re_.execute(*storm)   # compile the batch shape on the old plan
+        re_.execute(*clean)   # reset the streak the compile batch started
+        lat, ovf = [], []
+        trigger = recovered = None
+        for i in range(1, max_batches + 1):
+            t0 = _time.perf_counter()
+            _, _, st = re_.execute(*storm)
+            n = int(st["overflow_queries"])
+            lat.append((_time.perf_counter() - t0) * 1e3)
+            ovf.append(n)
+            if trigger is None and bool(st["persistent_overflow"]):
+                trigger = i
+            if trigger is not None and n == 0:
+                recovered = i
+                break
+        re_.join()
+        assert trigger is not None and recovered is not None, (trigger, ovf)
+        assert ovf[trigger - 1] > 0 and ovf[recovered - 1] == 0
+        steady = [time_fn(lambda: re_.execute(*storm)[0], warmup=0, repeats=1)
+                  * 1e3 for _ in range(3)]
+        during = lat[trigger - 1:recovered]
+        return {
+            "trigger_batch": trigger,
+            "batches_to_recovery": recovered - trigger,
+            "overflow_queries_before_swap": ovf[trigger - 1],
+            "overflow_queries_after_swap": ovf[recovered - 1],
+            "cand_capacity_before": cap_before,
+            "cand_capacity_after": re_.plan.cand_capacity,
+            "swap_stall_p99_ms": round(float(np.percentile(during, 99)), 1),
+            "steady_batch_ms": round(float(np.median(steady)), 1),
+            "reestimator": re_.stats(),
+        }
+
+    variants = {"warmup": storm} if smoke or quick else \
+        {"no_warmup": None, "warmup": storm}
+    results = {}
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("ignore")  # the storm's overflow warning
+        for name, warmup in variants.items():
+            r = heal_run(warmup)
+            results[name] = r
+            assert r["reestimator"]["state"] == "healthy", r
+            _row("reestimator", f"{name}_batches_to_recovery",
+                 str(r["batches_to_recovery"]),
+                 f"trigger at batch {r['trigger_batch']} "
+                 f"(threshold={PERSISTENT_OVERFLOW_BATCHES})")
+            _row("reestimator", f"{name}_overflow_before_after",
+                 f"{r['overflow_queries_before_swap']} -> "
+                 f"{r['overflow_queries_after_swap']}",
+                 f"of {nq}; cand_capacity {r['cand_capacity_before']} -> "
+                 f"{r['cand_capacity_after']}")
+            _row("reestimator", f"{name}_swap_stall_p99",
+                 f"{r['swap_stall_p99_ms']:.0f}ms",
+                 f"steady post-swap batch {r['steady_batch_ms']:.0f}ms")
+    if len(results) == 2:
+        _row("reestimator", "warmup_stall_reduction",
+             f"{results['no_warmup']['swap_stall_p99_ms'] / max(results['warmup']['swap_stall_p99_ms'], 1e-9):.1f}x",
+             "warmup-before-publish keeps the new plan's compile off the serving thread")
+
+    if write_json:
+        os.makedirs(os.path.dirname(json_path), exist_ok=True)
+        blob = {
+            "backend": jax.default_backend(),
+            "mode": "Pallas kernels in interpret mode on CPU (absolute "
+                    "latencies emulated; the warmup contrast is the "
+                    "portable result)",
+            "m": m, "nq_per_batch": nq, "k": p.k,
+            "persistent_overflow_batches": PERSISTENT_OVERFLOW_BATCHES,
+            "variants": results,
+            "protocol": "out-of-bbox storm batches against a plan whose "
+                        "capacity model assumed query_occupancy=64; per-batch "
+                        "wall latency on the serving thread; stall window = "
+                        "batches from streak trigger to first zero-overflow "
+                        "batch; bitwise recovery proof lives in "
+                        "tests/serving/test_reestimator.py",
+        }
+        with open(json_path, "w") as f:
+            json.dump(blob, f, indent=2)
+        _row("reestimator", "json", json_path)
+
+
 def lm_rooflines(quick=False):
     """Roofline summary from the dry-run artifacts (EXPERIMENTS §Roofline)."""
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -907,6 +1036,7 @@ def main() -> None:
     blend_json = os.path.join(os.path.dirname(__file__), "results", "grid_blend.json")
     farfield_json = os.path.join(os.path.dirname(__file__), "results", "farfield.json")
     quadtree_json = os.path.join(os.path.dirname(__file__), "results", "quadtree.json")
+    reestimator_json = os.path.join(os.path.dirname(__file__), "results", "reestimator.json")
     tables = {
         "table1": table1_execution_time,
         "fig4": fig4_speedups,
@@ -918,6 +1048,7 @@ def main() -> None:
         "blend": functools.partial(grid_blend, smoke=args.smoke, json_path=blend_json),
         "farfield": functools.partial(farfield_phase2, smoke=args.smoke, json_path=farfield_json),
         "quadtree": functools.partial(quadtree_phase2, smoke=args.smoke, json_path=quadtree_json),
+        "reestimator": functools.partial(reestimator_heal, smoke=args.smoke, json_path=reestimator_json),
         "lm": lm_rooflines,
     }
     only = set(args.only.split(",")) if args.only else None

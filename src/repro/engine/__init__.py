@@ -13,7 +13,8 @@ plan is built once and reused across query batches with zero retraces:
     z2, a2 = execute(plan, qx2, qy2)     # cache hit (same shapes)
 """
 
-from repro.engine.plan import InterpolationPlan, build_plan
+from repro.engine.plan import InterpolationPlan, build_plan, replan_with_capacity
 from repro.engine.execute import execute, execute_with_stats
 
-__all__ = ["InterpolationPlan", "build_plan", "execute", "execute_with_stats"]
+__all__ = ["InterpolationPlan", "build_plan", "execute", "execute_with_stats",
+           "replan_with_capacity"]

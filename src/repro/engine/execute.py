@@ -43,6 +43,7 @@ from repro.core.grid import (
 )
 from repro.core.layouts import pad_tail, pad_to
 from repro.engine.plan import InterpolationPlan
+from repro.errors import CapacityOverflowWarning
 from repro.kernels.aidw_fused import aidw_fused_soa
 from repro.kernels.aidw_grid import (
     block_rectangles,
@@ -566,13 +567,27 @@ def _execute_chunked(plan: InterpolationPlan, qx, qy):
 
 
 def _execute(plan: InterpolationPlan, qx, qy):
+    # Input hardening: a NaN/Inf query coordinate would otherwise flow
+    # through the kernel min-reductions into a silently wrong (finite) alpha
+    # and z.  Replace non-finite queries with an in-bbox dummy for the
+    # compute (so they cannot distort block rectangles or capacities
+    # either) and NaN-mask their outputs — NaN in, NaN out.
+    qx = jnp.asarray(qx)
+    qy = jnp.asarray(qy)
+    bad = ~(jnp.isfinite(qx) & jnp.isfinite(qy))
+    zero = jnp.zeros((), qx.dtype)
+    qx = jnp.where(bad, zero, qx)
+    qy = jnp.where(bad, zero, qy)
     if plan.impl == "grid":
-        return _execute_grid(plan, qx, qy)
-    if plan.impl == "idw":
-        return _execute_idw(plan, qx, qy)
-    if plan.impl == "chunked":
-        return _execute_chunked(plan, qx, qy)
-    return _execute_dense(plan, qx, qy)
+        z, a, stats = _execute_grid(plan, qx, qy)
+    elif plan.impl == "idw":
+        z, a, stats = _execute_idw(plan, qx, qy)
+    elif plan.impl == "chunked":
+        z, a, stats = _execute_chunked(plan, qx, qy)
+    else:
+        z, a, stats = _execute_dense(plan, qx, qy)
+    nan = jnp.asarray(jnp.nan, z.dtype)
+    return jnp.where(bad, nan, z), jnp.where(bad, nan, a), stats
 
 
 @jax.jit
@@ -582,6 +597,11 @@ def execute(plan: InterpolationPlan, qx, qy):
     Pure and jit-compatible for every impl (the plan's statics live in the
     pytree aux data, so they are trace-time constants).  Returns
     ``(z_hat, alpha)``, shape ``(n,)`` each, in caller query order.
+
+    Non-finite query coordinates are hardened: a query with a NaN/Inf in
+    either coordinate yields NaN ``z_hat`` and NaN ``alpha`` (never a
+    silently wrong finite value), and the finite queries in the same batch
+    are computed exactly as if the bad slots held in-bbox dummies.
     """
     z, a, _ = _execute(plan, qx, qy)
     return z, a
@@ -618,8 +638,10 @@ def _note_overflow(plan: InterpolationPlan, n_overflow: int) -> bool:
             "this plan: the static candidate capacity looks undersized for "
             "the serving workload (results stay exact via the ring-search "
             "blend, but at ring-search cost). Consider re-planning with a "
-            "lower query_occupancy= or a coarser grid.",
-            RuntimeWarning,
+            "lower query_occupancy= or a coarser grid — or serve through "
+            "repro.serving.CapacityReestimator, which re-plans and swaps "
+            "automatically.",
+            CapacityOverflowWarning,
             stacklevel=3,
         )
     return streak >= PERSISTENT_OVERFLOW_BATCHES

@@ -42,6 +42,7 @@ from repro.core.grid import (
     static_cell_radius,
 )
 from repro.core.layouts import coord_sentinel, pad_to, soa_to_aoas
+from repro.errors import PathologicalGridWarning, UnprovableRtolWarning
 
 Impl = Literal["naive", "tiled", "binned", "fused", "grid", "tiled_v2", "idw", "chunked"]
 Layout = Literal["soa", "aoas"]
@@ -330,6 +331,7 @@ def _choose_farfield_radius(grid: UniformGrid, params: AIDWParams,
         f"bound {bound:.3g}. Measured error is typically far below the "
         "bound — check farfield_error_report, or pass farfield_radius= / a "
         "coarser grid to trade speed for guarantee.",
+        UnprovableRtolWarning,
         stacklevel=4,
     )
     return radius, bound
@@ -413,6 +415,7 @@ def _choose_quadtree_radius(grid: UniformGrid, params: AIDWParams,
         f"{radius} with worst-case bound {bound:.3g}; measured error is "
         "typically far below it — check farfield_error_report, or use a "
         "coarser grid / sub-cell-clustered data for a provable target.",
+        UnprovableRtolWarning,
         stacklevel=4,
     )
     return radius, tau_eff, bound
@@ -477,8 +480,15 @@ def _choose_seam_level(grid: UniformGrid, window: int) -> int:
 
 def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
                query_occupancy, seam_level, phase2, farfield_rtol,
-               farfield_radius):
-    """Grid-impl plan: snapshot + static capacity + block_d autotune."""
+               farfield_radius, min_cand_capacity=None, min_p2_capacity=None):
+    """Grid-impl plan: snapshot + static capacity + block_d autotune.
+
+    ``min_cand_capacity`` / ``min_p2_capacity`` floor the occupancy-model
+    capacities (still clamped to ``m`` — a candidate row can never need
+    more than every data point).  This is the capacity re-estimator's
+    entry: a re-plan raises the floor past the observed ``cand_need_max``
+    instead of re-deriving the same undersized model answer.
+    """
     m = int(dx.shape[0])
     dtype = jnp.asarray(dx).dtype
     user_grid = grid is not None
@@ -501,6 +511,7 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
                 f"data (grid-max safe radius {r_static}, static candidate "
                 f"window {window} cells); candidate rows approach a full "
                 "sweep. Pass a coarser grid or higher target_occupancy.",
+                PathologicalGridWarning,
                 stacklevel=3,
             )
             break
@@ -514,6 +525,8 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
     # wider than the (128-aligned) capacity — narrow neighbourhoods get a
     # single tile instead of streaming block_d of sentinel padding
     capacity = min(capacity, m)
+    if min_cand_capacity is not None:
+        capacity = min(max(capacity, int(min_cand_capacity)), m)
     cand_block_d = min(block_d, max(128, _round_up(capacity, 128)))
     cand_capacity = _round_up(capacity, cand_block_d)
 
@@ -555,6 +568,8 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
         # densest-window capacity model, same tile autotune
         window2 = min(side + 2 * radius + 1, max(grid.gx, grid.gy))
         cap2 = min(_densest_window_count(grid, window2), m)
+        if min_p2_capacity is not None:
+            cap2 = min(max(cap2, int(min_p2_capacity)), m)
         tile_cap = max(512, _round_up(_P2_TILE_ELEMS // block_q, 128))
         p2_block_d = min(tile_cap, max(128, _round_up(cap2, 128)))
         p2_capacity = _round_up(cap2, p2_block_d)
@@ -595,6 +610,8 @@ def _plan_grid(dx, dy, dz, *, params, block_q, block_d, grid, target_occupancy,
         # block's home bbox expanded by the near radius instead of r_safe
         window2 = min(side + 2 * radius + 1, max(grid.gx, grid.gy))
         cap2 = min(_densest_window_count(grid, window2), m)
+        if min_p2_capacity is not None:
+            cap2 = min(max(cap2, int(min_p2_capacity)), m)
         # Phase-2 tiles are autotuned independently of block_d: the near row
         # is narrow (<= capacity, vs m for the full sweep), so the widest
         # tile that keeps the (block_q x tile) distance/weight tile within a
@@ -643,6 +660,8 @@ def build_plan(
     phase2: str = "exact",
     farfield_rtol: float = 1e-3,
     farfield_radius: int | None = None,
+    min_cand_capacity: int | None = None,
+    min_p2_capacity: int | None = None,
 ) -> InterpolationPlan:
     """Build an :class:`InterpolationPlan` from a dataset + configuration.
 
@@ -693,6 +712,14 @@ def build_plan(
     model's radius choice directly (the bound is still computed and
     reported for the chosen radius — possibly ``inf`` for radii too small
     to prove anything).
+    ``min_cand_capacity`` / ``min_p2_capacity`` (grid impl) floor the
+    occupancy-model capacities, clamped to ``m`` — the capacity
+    re-estimator's re-plan knob (see :func:`replan_with_capacity`).
+
+    Data must be finite: non-finite coordinates or z values raise
+    ``ValueError`` (a NaN data point would silently poison every distance
+    reduction it streams through).  Non-finite *queries* are handled at
+    execute time instead — they yield NaN results.
     """
     valid_impls = _DENSE_IMPLS + ("grid", "idw", "chunked")
     if impl not in valid_impls:
@@ -720,6 +747,25 @@ def build_plan(
         raise ValueError(f"farfield_rtol must be > 0, got {farfield_rtol!r}")
     if farfield_radius is not None and int(farfield_radius) < 1:
         raise ValueError(f"farfield_radius must be >= 1, got {farfield_radius!r}")
+    for name, floor in (("min_cand_capacity", min_cand_capacity),
+                        ("min_p2_capacity", min_p2_capacity)):
+        if floor is not None and int(floor) < 1:
+            raise ValueError(f"{name} must be >= 1, got {floor!r}")
+
+    # Reject non-finite data eagerly (tracers — the sharded chunked path
+    # plans inside shard_map — can't be checked and are trusted instead).
+    for name, arr in (("dx", dx), ("dy", dy), ("dz", dz)):
+        if isinstance(arr, jax.core.Tracer):
+            continue
+        vals = jnp.asarray(arr)
+        if jnp.issubdtype(vals.dtype, jnp.floating) and not bool(
+            jnp.all(jnp.isfinite(vals))
+        ):
+            raise ValueError(
+                f"non-finite values in {name}: data points and z must be "
+                "finite (NaN/Inf would silently poison the kernel distance "
+                "reductions). Filter the dataset before planning."
+            )
 
     m = int(dx.shape[0])
     if impl != "idw" and m < params.k:
@@ -755,6 +801,8 @@ def build_plan(
             query_occupancy=query_occupancy, seam_level=seam_level,
             phase2=phase2, farfield_rtol=float(farfield_rtol),
             farfield_radius=farfield_radius,
+            min_cand_capacity=min_cand_capacity,
+            min_p2_capacity=min_p2_capacity,
         ))
     elif impl == "chunked":
         if knn == "grid" and grid is None:
@@ -774,3 +822,39 @@ def build_plan(
             fields.update(data=(dxp[None, :], dyp[None, :], dzp[None, :]))
 
     return InterpolationPlan(**fields)
+
+
+def replan_with_capacity(
+    plan: InterpolationPlan, *,
+    min_cand_capacity: int | None = None,
+    min_p2_capacity: int | None = None,
+) -> InterpolationPlan:
+    """Rebuild a grid plan with floored capacities — the re-plan entry the
+    serving-layer capacity re-estimator calls from its background thread.
+
+    Everything else is carried over from ``plan``: the original (unpadded)
+    data arrays are recovered from the plan's padded copies, the grid
+    snapshot is REUSED (no rebuild — the data didn't change, the capacity
+    model did), and the statics (params/area/blocks/seam/pipeline/phase2
+    and the far-field knobs, including an explicit-radius carry-over so the
+    radius cannot drift between old and new plan) are passed through.  The
+    result serves the same queries with the same exactness contract; only
+    the static candidate widths (and their derived tile sizes) grow.
+    """
+    if plan.impl != "grid":
+        raise ValueError(
+            f"replan_with_capacity requires impl='grid', got {plan.impl!r}"
+        )
+    dxp, dyp, dzp = plan.data
+    dx, dy, dz = dxp[0, :plan.m], dyp[0, :plan.m], dzp[0, :plan.m]
+    return build_plan(
+        dx, dy, dz,
+        params=plan.params, area=plan.area, impl="grid",
+        block_q=plan.block_q, block_d=plan.block_d,
+        interpret=plan.interpret, grid=plan.grid,
+        seam_level=plan.seam_level, pipeline=plan.pipeline,
+        phase2=plan.phase2, farfield_rtol=plan.farfield_rtol,
+        farfield_radius=plan.farfield_radius or None,
+        min_cand_capacity=min_cand_capacity,
+        min_p2_capacity=min_p2_capacity,
+    )

@@ -5,8 +5,10 @@ over ``repro.engine``: each call builds an :class:`InterpolationPlan`
 (padding, sentinel data points, SoA/AoaS layout, interpret-mode
 autodetection, the grid snapshot — all captured once, in one place) and
 runs the jitted ``execute`` step.  Repeated convenience calls against the
-*same* data arrays reuse one memoized plan (a small weak-ref cache keyed on
-array identity + statics), so they stop paying the plan rebuild; callers
+*same* data arrays reuse one memoized plan — since PR 9 the memo is the
+process-default :class:`repro.serving.PlanRegistry` (bounded LRU, identity
+guards, counters; ``_PLAN_CACHE``/``_plan_cache_counters`` remain as
+read-only shims over it), so they stop paying the plan rebuild; callers
 that interpolate many query batches should still hold the plan themselves
 — it is explicit about lifetime and survives array identity changes:
 
@@ -18,79 +20,58 @@ that interpolate many query batches should still hold the plan themselves
 
 from __future__ import annotations
 
-import threading
 import warnings
-import weakref
-from collections import OrderedDict
 from typing import Literal
 
 from repro.core.aidw import AIDWParams
+from repro.serving.registry import default_registry, plan_key
 
 Impl = Literal["naive", "tiled", "fused", "binned", "grid", "tiled_v2"]
 Layout = Literal["soa", "aoas"]
 
-# Plan memoization for the one-shot conveniences: repeated aidw()/idw() calls
-# against the same data arrays reuse one InterpolationPlan instead of paying
-# the eager plan build (grid snapshot, required_radius table, capacity sweep)
-# per call.  Keyed on the data arrays' ids + the static config; array ids are
-# only trusted while the arrays are alive and identical, so each entry holds
-# weakrefs that are re-checked on every hit (id reuse after GC cannot alias)
-# and that evict the entry when a data array is collected (a dead entry would
-# otherwise pin the plan's padded dataset copies until LRU overflow).
-# CAVEAT (documented on aidw/idw): identity-based memoization cannot see
-# in-place mutation of a cached array's contents — mutate-and-reinterpolate
-# callers must pass fresh arrays or call plan_cache_clear().
-_PLAN_CACHE: OrderedDict = OrderedDict()
-_PLAN_CACHE_MAX = 8
-# RLock, not Lock: the weakref eviction callback can fire during a GC that
-# happens to run inside a locked section on the same thread
-_PLAN_CACHE_LOCK = threading.RLock()
-_plan_cache_counters = {"hits": 0, "misses": 0}
-
 
 def plan_cache_clear():
-    """Drop all memoized convenience-API plans (test / memory-pressure hook)."""
-    with _PLAN_CACHE_LOCK:
-        _PLAN_CACHE.clear()
-        _plan_cache_counters["hits"] = 0
-        _plan_cache_counters["misses"] = 0
+    """Drop all memoized convenience-API plans (test / memory-pressure hook).
+
+    Since PR 9 this clears the process-default ``repro.serving``
+    :class:`~repro.serving.PlanRegistry` (entries and counters), which is
+    where the convenience memo lives.
+    """
+    default_registry().clear()
 
 
 def _cached_build_plan(dx, dy, dz, **config):
+    """Plan memoization for the one-shot conveniences, backed by the
+    process-default serving registry: repeated aidw()/idw() calls against
+    the same data arrays reuse one InterpolationPlan instead of paying the
+    eager plan build (grid snapshot, required_radius table, capacity sweep)
+    per call.  Keyed on the data arrays' ids + the static config; the
+    registry's identity guards re-check the ids on every hit and evict the
+    entry when a data array is collected (see ``serving/registry.py``).
+    CAVEAT (documented on aidw/idw): identity-based memoization cannot see
+    in-place mutation of a cached array's contents — mutate-and-
+    reinterpolate callers must pass fresh arrays or call
+    plan_cache_clear()."""
     from repro.engine import build_plan  # lazy: kernels <-> engine
 
-    try:
-        key = (id(dx), id(dy), id(dz), tuple(sorted(config.items())))
-        hash(key)
-    except TypeError:  # unhashable config (e.g. a prebuilt grid=): no caching
+    key = plan_key(dx, dy, dz, config)
+    if key is None:  # unhashable config (e.g. a prebuilt grid=): no caching
         return build_plan(dx, dy, dz, **config)
+    return default_registry().get_or_build(
+        key, lambda: build_plan(dx, dy, dz, **config), guards=(dx, dy, dz)
+    )
 
-    with _PLAN_CACHE_LOCK:
-        entry = _PLAN_CACHE.get(key)
-        if entry is not None:
-            refs, plan = entry
-            if all(r() is a for r, a in zip(refs, (dx, dy, dz))):
-                _plan_cache_counters["hits"] += 1
-                _PLAN_CACHE.move_to_end(key)
-                return plan
-            del _PLAN_CACHE[key]  # id was reused by a different array
 
-    plan = build_plan(dx, dy, dz, **config)
-
-    def _evict(_ref, key=key):
-        with _PLAN_CACHE_LOCK:
-            _PLAN_CACHE.pop(key, None)
-
-    with _PLAN_CACHE_LOCK:
-        _plan_cache_counters["misses"] += 1
-        try:
-            refs = tuple(weakref.ref(a, _evict) for a in (dx, dy, dz))
-        except TypeError:  # unweakrefable inputs (plain lists, scalars): skip
-            return plan
-        _PLAN_CACHE[key] = (refs, plan)
-        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
-            _PLAN_CACHE.popitem(last=False)
-    return plan
+def __getattr__(name):
+    # Back-compat shims over the serving registry for the PR-4 cache
+    # internals: the entry dict (entries are (guards, plan) tuples, as
+    # before) and the 2-key counter view.
+    if name == "_PLAN_CACHE":
+        return default_registry()._entries
+    if name == "_plan_cache_counters":
+        stats = default_registry().stats()
+        return {"hits": stats["hits"], "misses": stats["misses"]}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def aidw(

@@ -1,0 +1,21 @@
+"""Serving layer: plan registry, capacity re-estimator, fault injection.
+
+The robustness backbone under ROADMAP direction 1 (the continuous-batching
+serving engine).  ``PlanRegistry`` owns plan lifetime (bounded LRU, identity
+guards, warmup, atomic hot-swap); ``CapacityReestimator`` closes the loop
+from the engine's ``persistent_overflow`` streak to a background re-plan +
+swap, degrading gracefully when growth is impossible; ``faults`` lets tests
+drive every path of that state machine deterministically.  DESIGN.md §9.
+"""
+
+from repro.serving import faults
+from repro.serving.reestimator import CapacityReestimator
+from repro.serving.registry import PlanRegistry, default_registry, plan_key
+
+__all__ = [
+    "CapacityReestimator",
+    "PlanRegistry",
+    "default_registry",
+    "faults",
+    "plan_key",
+]

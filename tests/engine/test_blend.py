@@ -22,6 +22,7 @@ import pytest
 from repro.core.aidw import AIDWParams, adaptive_alpha, aidw_reference
 from repro.core.grid import build_grid, cell_of, grid_r_obs, seam_layout, seam_segment_ids
 from repro.engine import build_plan, execute, execute_with_stats
+from repro.errors import CapacityOverflowWarning
 from repro.kernels import aidw, ops
 
 RTOL, ATOL = 2e-4, 2e-5
@@ -275,7 +276,7 @@ def test_persistent_overflow_counter_and_warning():
             _, _, stats = execute_with_stats(plan, qx, qy)
             assert int(stats["overflow_queries"]) > 0
             assert stats["persistent_overflow"] is False
-    with pytest.warns(RuntimeWarning, match="re-plan"):
+    with pytest.warns(CapacityOverflowWarning):
         _, _, stats = execute_with_stats(plan, qx, qy)
     assert stats["persistent_overflow"] is True
     # further overflowing batches keep the flag without re-warning

@@ -29,6 +29,7 @@ from repro.core.aidw import AIDWParams
 from repro.core.grid import build_grid, cell_aggregates
 from repro.engine import build_plan, execute, execute_with_stats
 from repro.engine.plan import _farfield_bound_model
+from repro.errors import UnprovableRtolWarning
 from conftest import require_hypothesis
 
 P = AIDWParams(k=10, area=1.0)
@@ -192,7 +193,7 @@ def test_plan_reports_bound_and_warns_when_unprovable():
     rng = np.random.default_rng(5)
     dx, dy = rng.random(4096).astype(np.float32), rng.random(4096).astype(np.float32)
     dz = _field(dx, dy)
-    with pytest.warns(UserWarning, match="not provable"):
+    with pytest.warns(UnprovableRtolWarning):
         plan = build_plan(dx, dy, dz, params=P, area=1.0, impl="grid",
                           phase2="farfield", farfield_rtol=1e-6)
     assert plan.farfield_radius >= 1

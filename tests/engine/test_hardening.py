@@ -1,0 +1,87 @@
+"""Input hardening (PR 9 satellite): non-finite queries yield NaN results
+(instead of flowing through the kernel min-reductions into a silently wrong
+finite alpha), finite queries in the same batch are untouched — bitwise —
+and build_plan rejects non-finite data up front with a clear ValueError."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.aidw import AIDWParams
+from repro.engine import build_plan, execute
+
+P = AIDWParams(k=5, area=1.0, r_max=64.0)
+IMPLS = ["grid", "tiled", "idw", "chunked"]
+
+
+def _data(m=512, seed=40):
+    rng = np.random.default_rng(seed)
+    dx = rng.random(m).astype(np.float32)
+    dy = rng.random(m).astype(np.float32)
+    dz = (np.sin(3 * dx) + dy).astype(np.float32)
+    return dx, dy, dz
+
+
+def _mixed_queries(n=64, seed=41):
+    """A batch with NaN and Inf scattered through both coordinates."""
+    rng = np.random.default_rng(seed)
+    qx = rng.random(n).astype(np.float32)
+    qy = rng.random(n).astype(np.float32)
+    qx[3], qy[7], qx[11] = np.nan, np.nan, np.inf
+    qy[12], qx[20] = -np.inf, np.nan
+    bad = ~(np.isfinite(qx) & np.isfinite(qy))
+    return qx, qy, bad
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_nonfinite_queries_yield_nan_finite_untouched(impl):
+    dx, dy, dz = _data()
+    plan = build_plan(dx, dy, dz, params=P, area=1.0, impl=impl)
+    qx, qy, bad = _mixed_queries()
+    z, a = execute(plan, jnp.asarray(qx), jnp.asarray(qy))
+    z, a = np.asarray(z), np.asarray(a)
+    assert np.isnan(z[bad]).all() and np.isnan(a[bad]).all()
+    assert np.isfinite(z[~bad]).all() and np.isfinite(a[~bad]).all()
+    # the finite queries' results are bitwise what the same batch computes
+    # with the bad slots replaced by the hardening dummy (compute untouched)
+    z_ref, a_ref = execute(plan, jnp.asarray(np.where(bad, 0.0, qx).astype(np.float32)),
+                           jnp.asarray(np.where(bad, 0.0, qy).astype(np.float32)))
+    np.testing.assert_array_equal(z[~bad], np.asarray(z_ref)[~bad])
+    np.testing.assert_array_equal(a[~bad], np.asarray(a_ref)[~bad])
+
+
+def test_nonfinite_handling_survives_outer_jit():
+    dx, dy, dz = _data()
+    plan = build_plan(dx, dy, dz, params=P, area=1.0, impl="grid")
+    qx, qy, bad = _mixed_queries()
+
+    @jax.jit
+    def serve(qx, qy):
+        return execute(plan, qx, qy)
+
+    z, _ = serve(jnp.asarray(qx), jnp.asarray(qy))
+    z = np.asarray(z)
+    assert np.isnan(z[bad]).all() and np.isfinite(z[~bad]).all()
+
+
+def test_all_nan_batch_is_all_nan():
+    dx, dy, dz = _data()
+    plan = build_plan(dx, dy, dz, params=P, area=1.0, impl="grid")
+    qx = jnp.full((32,), jnp.nan, jnp.float32)
+    z, a = execute(plan, qx, qx)
+    assert np.isnan(np.asarray(z)).all() and np.isnan(np.asarray(a)).all()
+
+
+@pytest.mark.parametrize("slot", ["dx", "dy", "dz"])
+@pytest.mark.parametrize("value", [np.nan, np.inf])
+def test_build_plan_rejects_nonfinite_data(slot, value):
+    arrays = dict(zip(("dx", "dy", "dz"), _data()))
+    arrays[slot] = arrays[slot].copy()
+    arrays[slot][17] = value
+    with pytest.raises(ValueError, match=f"non-finite values in {slot}"):
+        build_plan(arrays["dx"], arrays["dy"], arrays["dz"],
+                   params=P, area=1.0, impl="grid")
+    with pytest.raises(ValueError, match="non-finite"):
+        build_plan(arrays["dx"], arrays["dy"], arrays["dz"],
+                   params=P, area=1.0, impl="tiled")

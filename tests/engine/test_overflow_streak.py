@@ -1,0 +1,128 @@
+"""Concurrency and lifecycle of the persistent-overflow streak
+(engine/execute.py: _note_overflow) — the trigger the serving layer's
+capacity re-estimator consumes:
+
+* concurrent execute_with_stats against ONE plan keeps a consistent streak
+  (every batch counted, exactly one CapacityOverflowWarning at the
+  threshold — no double-warn);
+* a clean batch's reset is never lost (a fresh overflow run re-warns);
+* streaks are independent across plan objects;
+* the weakref.finalize cleanup drops the streak entry when the plan is
+  garbage-collected (no id-keyed leak, no stale-streak aliasing when the
+  id is reused).
+"""
+
+import gc
+import threading
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.aidw import AIDWParams
+from repro.engine import build_plan, execute_with_stats
+from repro.engine.execute import (
+    PERSISTENT_OVERFLOW_BATCHES,
+    _overflow_streaks,
+)
+from repro.errors import CapacityOverflowWarning
+
+P = AIDWParams(k=10, area=1.0, r_max=64.0)
+
+
+def _plan(seed=19, m=4096):
+    rng = np.random.default_rng(seed)
+    dx = rng.random(m).astype(np.float32)
+    dy = rng.random(m).astype(np.float32)
+    dz = (dx * dy).astype(np.float32)
+    # dense assumed occupancy => sparse/out-of-bbox batches overflow
+    return build_plan(dx, dy, dz, params=P, area=1.0, impl="grid",
+                      query_occupancy=64.0)
+
+
+def _storm(seed=20, n=64):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray((rng.random(n) * 6 - 3).astype(np.float32)),
+            jnp.asarray((rng.random(n) * 6 - 3).astype(np.float32)))
+
+
+def _clean(seed=21, n=64):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray((0.4 + 0.05 * rng.random(n)).astype(np.float32)),
+            jnp.asarray((0.4 + 0.05 * rng.random(n)).astype(np.float32)))
+
+
+def test_concurrent_batches_consistent_streak_single_warning():
+    plan = _plan()
+    qx, qy = _storm()
+    execute_with_stats(plan, *_clean())  # compile + reset before the race
+    n_threads = max(PERSISTENT_OVERFLOW_BATCHES + 2, 6)
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def serve():
+        try:
+            barrier.wait()
+            _, _, st = execute_with_stats(plan, qx, qy)
+            assert int(st["overflow_queries"]) > 0
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    # catch_warnings mutates process-global state, so worker-thread
+    # warnings are recorded here too
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        threads = [threading.Thread(target=serve) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errors
+    # every concurrent batch was counted — none lost to a race
+    assert _overflow_streaks[id(plan)] == n_threads
+    hits = [w for w in rec if issubclass(w.category, CapacityOverflowWarning)]
+    assert len(hits) == 1  # exactly one thread crossed the threshold
+
+
+def test_reset_not_lost_and_rewarn_after_fresh_streak():
+    plan = _plan(seed=23)
+    qx, qy = _storm(seed=24)
+    with pytest.warns(CapacityOverflowWarning):
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+            execute_with_stats(plan, qx, qy)
+    _, _, st = execute_with_stats(plan, *_clean(seed=25))
+    assert st["persistent_overflow"] is False
+    assert _overflow_streaks[id(plan)] == 0
+    # the reset armed a fresh streak: the threshold warns AGAIN
+    with pytest.warns(CapacityOverflowWarning):
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+            _, _, st = execute_with_stats(plan, qx, qy)
+    assert st["persistent_overflow"] is True
+
+
+def test_streaks_independent_across_plans():
+    plan_a, plan_b = _plan(seed=26), _plan(seed=27)
+    qx, qy = _storm(seed=28)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", CapacityOverflowWarning)
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+            _, _, st_a = execute_with_stats(plan_a, qx, qy)
+        # interleave ONE overflowing batch against plan_b
+        _, _, st_b = execute_with_stats(plan_b, qx, qy)
+    assert st_a["persistent_overflow"] is True
+    assert st_b["persistent_overflow"] is False
+    assert _overflow_streaks[id(plan_a)] == PERSISTENT_OVERFLOW_BATCHES
+    assert _overflow_streaks[id(plan_b)] == 1
+
+
+def test_finalize_drops_entry_on_plan_gc():
+    plan = _plan(seed=29)
+    key = id(plan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", CapacityOverflowWarning)
+        execute_with_stats(plan, *_storm(seed=30))
+    assert key in _overflow_streaks
+    del plan
+    gc.collect()
+    assert key not in _overflow_streaks

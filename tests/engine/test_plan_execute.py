@@ -16,6 +16,7 @@ from repro.core.grid import build_grid
 from repro.core.idw import idw_reference
 from repro.engine import build_plan, execute, execute_with_stats
 from repro.engine.execute import _execute
+from repro.errors import PathologicalGridWarning
 from repro.kernels import aidw, idw
 from conftest import make_points
 
@@ -150,7 +151,7 @@ def test_grid_plan_rebuilds_pathological_resolution():
     assert plan.grid_rebuilds > 0
     g = build_grid(jnp.asarray(pts[:, 0]), jnp.asarray(pts[:, 1]), jnp.asarray(dz),
                    gx=64, gy=64)
-    with pytest.warns(UserWarning, match="pathological"):
+    with pytest.warns(PathologicalGridWarning):
         user_plan = build_plan(pts[:, 0], pts[:, 1], dz, params=p, area=1.0,
                                impl="grid", grid=g)
     assert user_plan.grid is g

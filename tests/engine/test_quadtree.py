@@ -34,6 +34,7 @@ from repro.core.aidw import AIDWParams
 from repro.core.grid import build_grid, quadtree_aggregates, quadtree_level_count
 from repro.engine import build_plan, execute, execute_with_stats
 from repro.engine.plan import _bound_from_tau, _quadtree_tau_required
+from repro.errors import UnprovableRtolWarning
 
 P = AIDWParams(k=10, area=1.0)
 DISTRIBUTIONS = ("uniform", "clustered", "seam", "out_of_bbox")
@@ -152,7 +153,7 @@ def test_unprovable_config_warns_and_stays_within_honest_bound():
     dz = _field(dx, dy)
     g = build_grid(jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
                    gx=12, gy=12)
-    with pytest.warns(UserWarning, match="not provable"):
+    with pytest.warns(UnprovableRtolWarning):
         plan = build_plan(dx, dy, dz, params=P, area=1.0, impl="grid",
                           grid=g, phase2="quadtree", block_q=64)
     assert plan.farfield_bound > 1e-3

@@ -1,0 +1,98 @@
+"""Fault-injection harness semantics (serving/faults.py): arming, firing
+order, times-bounded firings, error/delay/value/transform application, and
+guaranteed disarm on context exit — the deterministic substrate every
+recover/degrade test in test_reestimator.py stands on."""
+
+import time
+
+import pytest
+
+from repro.serving import faults
+
+
+def test_fire_is_noop_when_nothing_armed():
+    assert faults.fire("reestimator.build") is None
+    sentinel = {"overflow_queries": 3}
+    assert faults.fire("reestimator.stats", sentinel) is sentinel
+    assert faults.active_points() == ()
+
+
+def test_unknown_point_rejected_in_inject_and_fire():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        with faults.inject("reestimator.typo"):
+            pass
+    with pytest.raises(ValueError, match="unknown injection point"):
+        faults.fire("registry.typo")
+
+
+def test_error_injection_counts_and_disarms_on_exit():
+    class Boom(RuntimeError):
+        pass
+
+    with faults.inject("reestimator.build", error=Boom) as fault:
+        with pytest.raises(Boom):
+            faults.fire("reestimator.build")
+        assert fault.fired == 1
+    # context exited: the fault is gone
+    assert faults.fire("reestimator.build") is None
+    assert faults.active_points() == ()
+
+
+def test_error_instance_carries_its_message():
+    err = ValueError("specific message")
+    with faults.inject("reestimator.build", error=err):
+        with pytest.raises(ValueError, match="specific message"):
+            faults.fire("reestimator.build")
+
+
+def test_times_bounds_firings_then_passes_through():
+    class Boom(RuntimeError):
+        pass
+
+    with faults.inject("reestimator.build", error=Boom, times=2) as fault:
+        for _ in range(2):
+            with pytest.raises(Boom):
+                faults.fire("reestimator.build")
+        # third firing: exhausted, passes through
+        assert faults.fire("reestimator.build") is None
+        assert fault.fired == 2
+
+
+def test_value_and_transform_override():
+    with faults.inject("reestimator.capacity", value=7):
+        assert faults.fire("reestimator.capacity", 4096) == 7
+    with faults.inject("reestimator.stats",
+                       transform=lambda s: dict(s, overflow_queries=99)):
+        out = faults.fire("reestimator.stats", {"overflow_queries": 0})
+        assert out["overflow_queries"] == 99
+    with pytest.raises(ValueError, match="not both"):
+        with faults.inject("reestimator.capacity", value=1, transform=int):
+            pass
+
+
+def test_delay_sleeps_before_passthrough():
+    t0 = time.monotonic()
+    with faults.inject("registry.swap", delay=0.05):
+        assert faults.fire("registry.swap", "key") == "key"
+    assert time.monotonic() - t0 >= 0.05
+
+
+def test_nested_faults_fire_in_arming_order():
+    with faults.inject("reestimator.capacity", transform=lambda v: v + 1):
+        with faults.inject("reestimator.capacity", transform=lambda v: v * 10):
+            # outer armed first: (1 + 1) * 10
+            assert faults.fire("reestimator.capacity", 1) == 20
+        assert faults.fire("reestimator.capacity", 1) == 2
+
+
+def test_crashing_with_block_still_disarms():
+    with pytest.raises(KeyError):
+        with faults.inject("reestimator.build", error=RuntimeError):
+            raise KeyError("test crash inside the block")
+    assert faults.active_points() == ()
+
+
+def test_times_validation():
+    with pytest.raises(ValueError, match="times"):
+        with faults.inject("reestimator.build", error=RuntimeError, times=0):
+            pass

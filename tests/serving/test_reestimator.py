@@ -1,0 +1,275 @@
+"""Capacity re-estimator state machine (serving/reestimator.py) — the PR-9
+acceptance criteria, driven deterministically through the fault harness:
+
+* recovery proof: a persistent-overflow workload triggers a background
+  re-plan + atomic swap, ``overflow_queries`` drops to 0 within
+  ``<= 2 * PERSISTENT_OVERFLOW_BATCHES`` batches of the streak trigger, and
+  EVERY batch served before / during / after the swap is bitwise equal to a
+  fresh-plan reference (old plan before the swap, bumped plan after);
+* injected build failures retry with bounded backoff and then either
+  succeed (``times``-bounded fault) or degrade with ONE typed
+  :class:`PlanDegradedWarning` — results staying exact via the blend arms;
+* capacity-cap exhaustion degrades without a build attempt;
+* synthetic overflow streaks injected at ``reestimator.stats`` flow through
+  the REAL streak machinery.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.aidw import AIDWParams
+from repro.engine import build_plan, execute, replan_with_capacity
+from repro.engine.execute import PERSISTENT_OVERFLOW_BATCHES
+from repro.errors import CapacityOverflowWarning, PlanBuildError, PlanDegradedWarning
+from repro.serving import CapacityReestimator, PlanRegistry, faults
+from repro.serving.reestimator import DEGRADED, HEALTHY, REPLANNING
+
+P = AIDWParams(k=10, area=1.0, r_max=64.0)
+M = 4096
+GROWTH = 2.0
+
+
+def _dataset():
+    rng = np.random.default_rng(19)
+    dx = rng.random(M).astype(np.float32)
+    dy = rng.random(M).astype(np.float32)
+    dz = (np.sin(3 * dx) * np.cos(2 * dy)).astype(np.float32)
+    return dx, dy, dz
+
+
+def _base_plan(data):
+    # query_occupancy far denser than the serving batches: the capacity
+    # model undersizes on purpose, so out-of-bbox batches overflow every
+    # time (the deterministic "overflow storm" of tests/engine/test_blend)
+    return build_plan(*data, params=P, area=1.0, impl="grid",
+                      query_occupancy=64.0)
+
+
+def _storm_batch(seed=20, n=64):
+    rng = np.random.default_rng(seed)
+    qx = (rng.random(n) * 6 - 3).astype(np.float32)
+    qy = (rng.random(n) * 6 - 3).astype(np.float32)
+    return jnp.asarray(qx), jnp.asarray(qy)
+
+
+def _clean_batch(seed=21, n=64):
+    rng = np.random.default_rng(seed)
+    qx = (0.4 + 0.05 * rng.random(n)).astype(np.float32)
+    qy = (0.4 + 0.05 * rng.random(n)).astype(np.float32)
+    return jnp.asarray(qx), jnp.asarray(qy)
+
+
+def _reestimator(data, **kw):
+    plan = _base_plan(data)
+    reg = PlanRegistry()
+    kw.setdefault("backoff", 0.0)
+    return reg, plan, CapacityReestimator(reg, "serve", plan, **kw)
+
+
+def test_recovery_proof_overflow_drops_to_zero_bitwise():
+    """The headline acceptance criterion."""
+    data = _dataset()
+    reg, plan, re_ = _reestimator(data)
+    ref_old = _base_plan(data)  # fresh, never-swapped reference build
+    assert plan.cand_capacity == ref_old.cand_capacity
+    qx, qy = _storm_batch()
+
+    # drive the streak to the trigger; every pre-swap batch must be bitwise
+    # equal to the fresh old-plan reference (serving is never disturbed)
+    z_ref, a_ref = execute(ref_old, qx, qy)
+    need_max = 0
+    with pytest.warns(CapacityOverflowWarning):
+        for batch in range(1, PERSISTENT_OVERFLOW_BATCHES + 1):
+            z, a, st = re_.execute(qx, qy)
+            assert int(st["overflow_queries"]) > 0
+            need_max = max(need_max, int(st["cand_need_max"]))
+            np.testing.assert_array_equal(np.asarray(z), np.asarray(z_ref))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    trigger_batch = PERSISTENT_OVERFLOW_BATCHES
+    assert st["persistent_overflow"] is True
+
+    assert re_.join() == HEALTHY
+    # the swapped plan equals a fresh build at the re-estimator's target
+    target = min(max(int(ref_old.cand_capacity * GROWTH), need_max), M)
+    ref_new = replan_with_capacity(ref_old, min_cand_capacity=target,
+                                   min_p2_capacity=target)
+    assert re_.plan.cand_capacity == ref_new.cand_capacity > plan.cand_capacity
+
+    # post-swap: the SAME storm no longer overflows, bitwise vs fresh plan
+    z_new_ref, a_new_ref = execute(ref_new, qx, qy)
+    z2, a2, st2 = re_.execute(qx, qy)
+    recovered_batch = trigger_batch + 1
+    assert int(st2["overflow_queries"]) == 0
+    assert recovered_batch - trigger_batch <= 2 * PERSISTENT_OVERFLOW_BATCHES
+    np.testing.assert_array_equal(np.asarray(z2), np.asarray(z_new_ref))
+    np.testing.assert_array_equal(np.asarray(a2), np.asarray(a_new_ref))
+    s = re_.stats()
+    assert (s["triggers"], s["swaps"], s["degraded"]) == (1, 1, 0)
+    assert reg.stats()["swaps"] == 1
+
+
+def test_serving_continues_on_old_plan_during_slow_replan():
+    data = _dataset()
+    _, plan, re_ = _reestimator(data)
+    ref_old = _base_plan(data)
+    qx, qy = _storm_batch()
+    z_ref, a_ref = execute(ref_old, qx, qy)
+    # a slow background build: the swap cannot have happened yet when the
+    # next batch is served
+    with faults.inject("reestimator.build", delay=1.0):
+        with pytest.warns(CapacityOverflowWarning):
+            for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+                re_.execute(qx, qy)
+        assert re_.state == REPLANNING
+        z, a, st = re_.execute(qx, qy)  # served DURING the re-plan
+        assert re_.state == REPLANNING
+        assert int(st["overflow_queries"]) > 0  # still the old plan...
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(z_ref))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    assert re_.join(timeout=30.0) == HEALTHY  # ...and the swap still lands
+    _, _, st2 = re_.execute(qx, qy)
+    assert int(st2["overflow_queries"]) == 0
+
+
+def test_build_failures_retry_then_succeed():
+    data = _dataset()
+    _, _, re_ = _reestimator(data, max_retries=3)
+    qx, qy = _storm_batch()
+    with faults.inject("reestimator.build", error=RuntimeError("flaky build"),
+                       times=2) as fault:
+        with pytest.warns(CapacityOverflowWarning):
+            for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+                re_.execute(qx, qy)
+        assert re_.join() == HEALTHY
+    assert fault.fired == 2
+    s = re_.stats()
+    assert s["build_failures"] == 2 and s["swaps"] == 1 and s["degraded"] == 0
+    _, _, st = re_.execute(qx, qy)
+    assert int(st["overflow_queries"]) == 0
+
+
+def test_build_failure_exhausts_retries_and_degrades_with_typed_warning():
+    data = _dataset()
+    _, plan, re_ = _reestimator(data, max_retries=2)
+    ref_old = _base_plan(data)
+    qx, qy = _storm_batch()
+    z_ref, a_ref = execute(ref_old, qx, qy)
+    # record everything: with backoff=0 the degrade can land DURING the
+    # trigger batch, so the typed warning may surface on that execute or
+    # the next one — either way it must appear exactly once, on the
+    # serving thread
+    with faults.inject("reestimator.build",
+                       error=RuntimeError("broken build")) as fault, \
+            warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+            re_.execute(qx, qy)
+        assert re_.join() == DEGRADED
+        z, a, st = re_.execute(qx, qy)
+    assert fault.fired == 2  # bounded: exactly max_retries attempts
+    assert isinstance(re_.last_error, PlanBuildError)
+    assert any(issubclass(w.category, CapacityOverflowWarning) for w in rec)
+    degr = [w for w in rec if issubclass(w.category, PlanDegradedWarning)]
+    assert len(degr) == 1 and "degraded" in str(degr[0].message)
+    # the batch is still served exactly through the blend arm of the OLD plan
+    assert int(st["overflow_queries"]) > 0
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(z_ref))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    # no re-warn, no re-trigger on further batches
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _, _, st = re_.execute(*_clean_batch())
+    assert re_.state == DEGRADED
+    assert re_.stats()["triggers"] == 1
+    # reset re-arms the machine
+    re_.reset()
+    assert re_.state == HEALTHY and re_.last_error is None
+
+
+def test_capacity_cap_exhaustion_degrades_without_build():
+    data = _dataset()
+    plan = _base_plan(data)
+    reg = PlanRegistry()
+    re_ = CapacityReestimator(reg, "serve", plan, backoff=0.0,
+                              capacity_cap=plan.cand_capacity)
+    qx, qy = _storm_batch()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+            re_.execute(qx, qy)
+        assert re_.join() == DEGRADED
+        re_.execute(qx, qy)
+    s = re_.stats()
+    assert s["replans"] == 0 and s["build_failures"] == 0  # never attempted
+    degr = [w for w in rec if issubclass(w.category, PlanDegradedWarning)]
+    assert len(degr) == 1 and "capacity cap" in str(degr[0].message)
+    assert re_.plan is plan  # nothing was swapped
+
+
+def test_injected_capacity_override_forces_degrade():
+    data = _dataset()
+    _, plan, re_ = _reestimator(data)
+    qx, qy = _storm_batch()
+    with faults.inject("reestimator.capacity", value=plan.cand_capacity):
+        with pytest.warns(CapacityOverflowWarning):
+            for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+                re_.execute(qx, qy)
+        assert re_.join() == DEGRADED
+
+
+def test_synthetic_streak_via_stats_injection_drives_real_machinery():
+    """A CLEAN workload + a stats transform fabricating overflow: the real
+    streak counter, trigger, re-plan and swap all run."""
+    data = _dataset()
+    _, plan, re_ = _reestimator(data)
+    qx, qy = _clean_batch()
+    fake = dict(overflow_queries=7, cand_need_max=M)
+    with faults.inject("reestimator.stats",
+                       transform=lambda s: dict(s, **fake),
+                       times=PERSISTENT_OVERFLOW_BATCHES):
+        with pytest.warns(CapacityOverflowWarning):
+            for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+                _, _, st = re_.execute(qx, qy)
+                assert int(st["overflow_queries"]) == 7
+    assert re_.join() == HEALTHY
+    assert re_.plan.cand_capacity == M  # bumped to the injected need
+    assert re_.stats()["swaps"] == 1
+    # injection exhausted: the next batch reports the true (clean) stats
+    _, _, st = re_.execute(qx, qy)
+    assert int(st["overflow_queries"]) == 0
+
+
+def test_stale_plan_evidence_does_not_retrigger_after_swap():
+    """A batch in flight while the swap lands carries the OLD plan's streak;
+    its persistent_overflow firing must not re-trigger a second re-plan of
+    the already-replaced plan (the free-running benchmark loop interleaving)."""
+    data = _dataset()
+    _, plan, re_ = _reestimator(data)
+    qx, qy = _storm_batch()
+    with pytest.warns(CapacityOverflowWarning):
+        for _ in range(PERSISTENT_OVERFLOW_BATCHES):
+            re_.execute(qx, qy)
+    assert re_.join() == HEALTHY
+    assert re_.plan is not plan
+    re_._maybe_replan(plan)  # the stale in-flight batch's trigger call
+    assert re_.state == HEALTHY  # ignored: evidence is about a replaced plan
+    s = re_.stats()
+    assert (s["triggers"], s["replans"], s["swaps"]) == (1, 1, 1)
+
+
+def test_constructor_validation():
+    data = _dataset()
+    plan = _base_plan(data)
+    reg = PlanRegistry()
+    with pytest.raises(ValueError, match="growth"):
+        CapacityReestimator(reg, "k", plan, growth=1.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        CapacityReestimator(reg, "k", plan, max_retries=0)
+    with pytest.raises(ValueError, match="backoff"):
+        CapacityReestimator(reg, "k", plan, backoff=-1.0)
+    dense = build_plan(*data, params=P, area=1.0, impl="tiled")
+    with pytest.raises(ValueError, match="grid plan"):
+        CapacityReestimator(reg, "k", dense)
